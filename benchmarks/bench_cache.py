@@ -1,0 +1,49 @@
+"""Paper Figure 11: response time vs per-processor cache capacity.
+
+Validates: (a) above some capacity, response time saturates (no eviction);
+(b) tiny caches are WORSE than no-cache (maintenance without hits);
+(c) smart routing reaches the no-cache break-even with less cache than
+baseline routing."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_graph, hotspot, print_table, run_scheme
+
+
+def main(quick: bool = False) -> dict:
+    g = bench_graph()
+    wl = hotspot(g, r=2, n_hotspots=25 if quick else 50)
+    no_cache = run_scheme(g, "no_cache", wl, P=4).mean_response_ms
+    sizes = (8, 64, 256, 1024, 4096) if not quick else (8, 256, 4096)
+    rows = []
+    for entries in sizes:
+        row = {"cache_entries": entries}
+        for scheme in ("hash", "embed"):
+            r = run_scheme(g, scheme, wl, P=4, cache_entries=entries)
+            row[f"{scheme}_ms"] = r.mean_response_ms
+            row[f"{scheme}_hit"] = r.hit_rate
+        rows.append(row)
+    print_table("Fig 11: impact of cache size", rows)
+    print(f"no-cache reference: {no_cache:.3f} ms")
+
+    # break-even capacity per scheme = smallest cache beating no-cache
+    def break_even(scheme):
+        for r in rows:
+            if r[f"{scheme}_ms"] < no_cache:
+                return r["cache_entries"]
+        return None
+
+    be_hash, be_embed = break_even("hash"), break_even("embed")
+    print(f"[validate] break-even capacity: hash={be_hash} embed={be_embed} "
+          f"(smart <= baseline: {be_embed is not None and (be_hash is None or be_embed <= be_hash)})")
+    big = rows[-1]
+    print(f"[validate] saturation: embed {big['embed_ms']:.3f} ms at "
+          f"{big['cache_entries']} entries (hit {big['embed_hit']:.3f})")
+    return {"rows": rows, "no_cache_ms": no_cache,
+            "break_even": {"hash": be_hash, "embed": be_embed}}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Roofline table reader: aggregates artifacts/dryrun/*.json (written by
+``python -m repro.launch.dryrun --all``) into the EXPERIMENTS.md tables.
+
+This bench does not compile anything itself (a full dry-run sweep takes
+~1-2 h of XLA compile time on this host); it renders + validates whatever
+cells have been materialized."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(art_dir: str = "artifacts/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def main(quick: bool = False) -> dict:
+    recs = load_records()
+    if not recs:
+        print("[bench_roofline] no dry-run artifacts found; run "
+              "`python -m repro.launch.dryrun --all` first")
+        return {}
+    print(f"\n== Roofline summary ({len(recs)} cells) ==")
+    hdr = ("arch,shape,mesh,mem_gb,fits,t_compute,t_memory,t_collective,"
+           "bottleneck,useful_frac,roofline_frac")
+    print(hdr)
+    n_fit = 0
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        m, rf = r["memory"], r["roofline"]
+        n_fit += m["fits_16gb_hbm"]
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{m['per_device_gb']:.2f},"
+              f"{m['fits_16gb_hbm']},{rf['t_compute_s']:.3e},"
+              f"{rf['t_memory_s']:.3e},{rf['t_collective_s']:.3e},"
+              f"{rf['bottleneck']},{rf['useful_flops_frac']:.3f},"
+              f"{rf['roofline_fraction']:.4f}")
+    ok = [r for r in recs if r.get("status") == "ok"]
+    print(f"[validate] {n_fit}/{len(ok)} compiled cells fit 16GB HBM/device")
+    return {"n_cells": len(ok), "n_fit": n_fit}
+
+
+if __name__ == "__main__":
+    main()

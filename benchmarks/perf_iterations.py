@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing harness: re-lower a cell under a named experiment
+(sharding-rule / config overrides), recompute the roofline terms, and diff
+against the baseline artifact.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterations --cell qwen3-4b:train_4k \
+        --exp pure_fsdp
+
+Experiments are declared in EXPERIMENTS below: each is (description,
+hypothesis, mutate_fn) where mutate_fn patches the DryRunSpec construction
+inputs. Results append to artifacts/perf/<cell>__<exp>.json."""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+
+# ---------------------------------------------------------------------------
+# experiment definitions
+# ---------------------------------------------------------------------------
+
+def _lm_rules(lm_cfg=None, **over):
+    """Build a Cell with modified logical rules / model config for an LM cell."""
+    def mutate(arch, shape):
+        from repro.configs.base import Cell, LM_SHAPES
+
+        base_rules = dict(LM_SHAPES[shape]["rules"])
+        base_rules.update(over)
+        cell = arch.cell(shape)
+        return dataclasses.replace(cell, rules=base_rules), dict(lm_cfg or {})
+    return mutate
+
+
+def _grouting_cfg(**over):
+    def mutate(arch, shape):
+        return arch.cell(shape), over
+    return mutate
+
+
+EXPERIMENTS = {
+    # LM: drop tensor parallelism entirely -- a 4B model fits pure ZeRO-3
+    # over all 256 chips; TP's per-layer activation all-reduces disappear,
+    # replaced by per-layer param all-gathers (much smaller for small d).
+    "pure_fsdp": dict(
+        hypothesis=(
+            "4.4B params => TP=16 unnecessary; pure FSDP over (data x model) "
+            "cuts TP activation all-reduces (~2 x 0.34GB x 36 x 3 passes) to "
+            "param all-gathers (~2 x 8.8GB/step received), shrinking "
+            "t_collective ~4x while t_compute is unchanged"),
+        mutate=_lm_rules(
+            heads=None, kv_heads=None, mlp=None, vocab=None,
+            experts=None, embed=("data", "model"), batch=("pod", "data"),
+        ),
+    ),
+    # LM: half TP (model axis used 8-way via fused dims is impossible with a
+    # fixed 16-way mesh, so instead shard vocab only -- embeddings/logits TP
+    # but dense layers pure FSDP).
+    "vocab_tp_only": dict(
+        hypothesis=(
+            "keep vocab x model sharding for the 152k-vocab CE head (its "
+            "logits dominate memory) but run dense layers as pure FSDP: "
+            "collective bytes between pure_fsdp and baseline, memory close "
+            "to baseline"),
+        mutate=_lm_rules(
+            heads=None, kv_heads=None, mlp=None, experts=None,
+            embed=("data", "model"),
+        ),
+    ),
+    # gRouting: halve the multi_read capacity (retry absorbs the tail) --
+    # the all_to_all buffers are the static collective payload.
+    "half_read_capacity": dict(
+        hypothesis=(
+            "multi_read a2a buffers are sized by read_capacity; halving it "
+            "halves static collective bytes; the bounded retry (4 rounds) "
+            "absorbs overflow on skewed frontiers"),
+        mutate=_grouting_cfg(read_capacity_scale=0.5),
+    ),
+    "quarter_read_capacity": dict(
+        hypothesis="as half_read_capacity but 4x smaller buffers",
+        mutate=_grouting_cfg(read_capacity_scale=0.25),
+    ),
+    # gRouting: smaller visited bitmap via fewer queries per processor
+    "qpp8": dict(
+        hypothesis=(
+            "visited bitmaps (B x n bool) dominate serve memory; halving "
+            "queries_per_proc halves them at half the batch throughput "
+            "(latency-optimized operating point)"),
+        mutate=_grouting_cfg(qpp_scale=0.5),
+    ),
+    # qwen2.5: 40 q heads / 8 kv heads are indivisible by the 16-way model
+    # axis, so GSPMD replicates attention activations (the worst roofline
+    # cell). Zero-padding to 48/16 heads is function-preserving (padded
+    # wq/wo slices are zero) and standard practice; attention then shards
+    # 16-way.
+    "pad_heads48": dict(
+        hypothesis=(
+            "40H/8KV % 16 != 0 replicates attention on the model axis; "
+            "zero-pad to 48H/16KV (+20% attention flops, function-"
+            "preserving) -> attention shards 16-way, collective term drops "
+            ">5x, compute term rises ~15%"),
+        mutate=_lm_rules(lm_cfg=dict(n_heads=48, n_kv_heads=16)),
+    ),
+    # LM: pure data parallelism over ALL 256 chips (batch -> pod x data x
+    # model) + ZeRO-3 param/optimizer sharding. pure_fsdp REFUTED the
+    # half-way version (dropping TP while batch only spans 16 shards leaves
+    # the model axis idle and multiplies per-device work); the fix is to
+    # give the batch the whole mesh.
+    "pure_dp256": dict(
+        hypothesis=(
+            "batch=256 shards over all 256 chips (1 seq/device); params+opt "
+            "ZeRO-3-shard over (data x model); per-device compute = "
+            "total/256 (~2.4s for 14B, ~0.75s for 4.4B); collective = param "
+            "all-gathers + grad reduce-scatter (~2.5 passes of param bytes) "
+            "<< TP activation all-reduces"),
+        mutate=_lm_rules(
+            heads=None, kv_heads=None, mlp=None, vocab=None, experts=None,
+            embed=("data", "model"), batch=("pod", "data", "model"),
+        ),
+    ),
+    "pad48_pure_dp256": dict(
+        hypothesis=(
+            "combine head padding (even though heads are unsharded now, "
+            "divisibility no longer matters -- control) with pure DP: "
+            "expect ~= pure_dp256"),
+        mutate=_lm_rules(
+            lm_cfg=dict(n_heads=48, n_kv_heads=16),
+            heads=None, kv_heads=None, mlp=None, vocab=None, experts=None,
+            embed=("data", "model"), batch=("pod", "data", "model"),
+        ),
+    ),
+    # LM decode: FSDP-sharded weights are re-all-gathered EVERY decoded
+    # token; a 4.4B model's weights fit TP-16-sharded (0.55GB/dev) and
+    # should be weight-stationary for serving.
+    "decode_tp_only": dict(
+        hypothesis=(
+            "decode is collective-bound because embed->data (FSDP) forces a "
+            "full param all-gather per token; serving wants weight-"
+            "stationary TP (embed->None): collective bytes drop to the "
+            "attention/logits psums, >5x lower"),
+        mutate=_lm_rules(embed=None),
+    ),
+    # qwen2.5 alternative: don't pad; shard attention over batch only and
+    # keep TP for FFN/vocab (heads -> None stops GSPMD from trying).
+    "heads_unsharded": dict(
+        hypothesis=(
+            "explicitly replicating heads (heads->None) avoids GSPMD's "
+            "gather-heavy resharding attempts; attention flops stay "
+            "replicated but collective bytes drop vs baseline"),
+        mutate=_lm_rules(heads=None, kv_heads=None),
+    ),
+}
+
+
+def run(cell: str, exp_name: str, out_dir: str = "artifacts/perf"):
+    import jax
+
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.analysis.roofline import build_report
+
+    arch_name, shape = cell.split(":")
+    arch = get_arch(arch_name)
+    exp = EXPERIMENTS[exp_name]
+    cell_obj, cfg_over = exp["mutate"](arch, shape)
+
+    mesh = make_production_mesh(multi_pod=False)
+
+    # build the spec with overrides
+    if arch.family == "lm":
+        from repro.configs import base as B
+
+        model_cfg = arch.model_cfg()
+        if cfg_over:
+            model_cfg = dataclasses.replace(model_cfg, **cfg_over)
+        def build(mode):
+            return B.build_lm_dryrun(model_cfg, shape, mesh, cell_obj, mode=mode)
+    elif arch.family == "grouting":
+        import dataclasses as dc
+        from repro.configs import grouting as G
+
+        def build(mode):
+            spec = arch.build_dryrun(shape, mesh, mode=mode)
+            return spec
+
+        if cfg_over:
+            # patch the module-level cfg factory
+            orig = G.model_cfg
+
+            def patched(shape_=shape):
+                c = orig(shape_)
+                changes = {}
+                if "read_capacity_scale" in cfg_over:
+                    changes["read_capacity"] = max(
+                        64, int(c.read_capacity * cfg_over["read_capacity_scale"]))
+                if "qpp_scale" in cfg_over:
+                    changes["queries_per_proc"] = max(
+                        1, int(c.queries_per_proc * cfg_over["qpp_scale"]))
+                return dc.replace(c, **changes)
+
+            G.model_cfg = patched
+    else:
+        raise SystemExit(f"no experiment support for family {arch.family}")
+
+    recs = {}
+    t0 = time.time()
+    spec_m = build("memory")
+    kw = {"in_shardings": spec_m.in_shardings}
+    if spec_m.out_shardings is not None:
+        kw["out_shardings"] = spec_m.out_shardings
+    with mesh:
+        comp_m = jax.jit(spec_m.fn, **kw).lower(*spec_m.args).compile()
+    mem = comp_m.memory_analysis()
+
+    needs_flops = arch.family == "lm" and arch.cell(shape).kind in ("train", "prefill")
+    seq = spec_m.meta.get("seq")
+    if needs_flops:
+        from repro.analysis.roofline import build_report_extrapolated
+
+        comps = []
+        for mode in ("flops1", "flops2"):
+            spec_f = build(mode)
+            kwf = {"in_shardings": spec_f.in_shardings}
+            if spec_f.out_shardings is not None:
+                kwf["out_shardings"] = spec_f.out_shardings
+            with mesh:
+                comps.append(jax.jit(spec_f.fn, **kwf).lower(*spec_f.args).compile())
+        rep = build_report_extrapolated(
+            arch_name, shape, "16x16", mesh.size,
+            comps[0].cost_analysis(), comps[0].as_text(),
+            comps[1].cost_analysis(), comps[1].as_text(),
+            groups=spec_m.meta["n_groups"], mem=mem,
+            model_flops=spec_m.meta.get("model_flops", 0.0), pod_size=256,
+            score_dims=(seq, seq) if seq else None,
+        )
+    else:
+        cost, hlo = comp_m.cost_analysis(), comp_m.as_text()
+        rep = build_report(
+            arch_name, shape, "16x16", mesh.size, cost, mem, hlo,
+            model_flops=spec_m.meta.get("model_flops", 0.0), pod_size=256,
+            score_dims=(seq, seq) if seq else None,
+        )
+    per_dev = mem.temp_size_in_bytes + mem.argument_size_in_bytes
+    rec = {
+        "cell": cell, "experiment": exp_name,
+        "hypothesis": exp["hypothesis"],
+        "mem_per_device_gb": round(per_dev / 2**30, 3),
+        "fits": bool(per_dev < 16 * 2**30),
+        "roofline": rep.row(),
+        "wall_s": round(time.time() - t0, 1),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    fn = f"{cell.replace(':', '__')}__{exp_name}.json"
+    with open(os.path.join(out_dir, fn), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+    # diff vs baseline artifact if present
+    base_f = f"artifacts/dryrun/{arch_name}__{shape}__16x16.json"
+    if os.path.exists(base_f):
+        with open(base_f) as f:
+            base = json.load(f)
+        br, nr = base["roofline"], rec["roofline"]
+        print(f"== {cell} :: {exp_name} ==")
+        print(f"hypothesis: {exp['hypothesis']}")
+        for k in ("t_compute_s", "t_memory_s", "t_collective_s", "roofline_fraction"):
+            b, n = float(br[k]), float(nr[k])
+            delta = (n / b - 1) * 100 if b else float("nan")
+            print(f"  {k:20s} {b:.3e} -> {n:.3e}  ({delta:+.0f}%)")
+        print(f"  mem/dev {base['memory']['per_device_gb']}GB -> "
+              f"{rec['mem_per_device_gb']}GB; bottleneck "
+              f"{br['bottleneck']} -> {nr['bottleneck']}")
+    else:
+        print(json.dumps(rec, indent=1, default=str)[:1500])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)  # arch:shape
+    ap.add_argument("--exp", required=True)
+    args = ap.parse_args()
+    run(args.cell, args.exp)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Render artifacts/dryrun/*.json into the EXPERIMENTS.md §Dry-run and
+§Roofline tables (markdown to stdout). Re-run any time; the sweep writes
+artifacts incrementally."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def main(art_dir: str = "artifacts/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    by_mesh = {}
+    for r in recs:
+        by_mesh.setdefault(r["mesh"], []).append(r)
+
+    print("### Dry-run table (memory-mode lowering, per device)\n")
+    for mesh in sorted(by_mesh):
+        rows = by_mesh[mesh]
+        print(f"\n**Mesh {mesh}** ({len(rows)} cells)\n")
+        print("| arch | shape | kind | mem/dev | fits 16GB | lower | compile | collectives |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+            if r.get("status") != "ok":
+                continue
+            m = r["memory"]
+            coll = r["roofline"]["collectives"]
+            cs = " ".join(f"{k.split('-')[-1] if '-' in k else k}:{v}"
+                          for k, v in coll.items())
+            print(f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+                  f"{m['per_device_gb']:.2f} GB | "
+                  f"{'Y' if m['fits_16gb_hbm'] else '**N**'} | "
+                  f"{r['t_lower_s']:.0f}s | {r['t_compile_s']:.0f}s | {cs} |")
+
+    print("\n### Roofline table (single-pod 16x16, flops-mode lowering)\n")
+    print("| arch | shape | t_compute | t_memory | t_mem_hlo | t_collective |"
+          " bound | useful_frac | roofline_frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(by_mesh.get("16x16", []), key=lambda x: (x["arch"], x["shape"])):
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {fmt_s(rf['t_compute_s'])} | "
+              f"{fmt_s(rf['t_memory_s'])} | {fmt_s(rf['t_memory_hlo_s'])} | "
+              f"{fmt_s(rf['t_collective_s'])} | {rf['bottleneck']} | "
+              f"{rf['useful_flops_frac']:.3f} | {rf['roofline_fraction']:.4f} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,59 @@
+"""Quickstart: the paper's full pipeline in ~60 lines.
+
+Builds a power-law graph, runs Algorithm 1 (landmarks) + Algorithm 3
+(embedding), then serves a hotspot workload through every routing scheme on
+the decoupled cluster simulator and prints paper-style rows (throughput,
+response time, cache hit rate).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.embedding import EmbedConfig, build_graph_embedding
+from repro.core.landmarks import build_landmark_index
+from repro.core.serving import BallCache, ServingSimulator, SimRouter, SimRouterConfig
+from repro.core.workloads import hotspot_workload
+from repro.graph.generators import community_graph
+
+
+def main():
+    print("== gRouting quickstart ==")
+    g = community_graph(n=12000, community_size=60, intra_degree=6,
+                        inter_degree=1.0, seed=0)
+    print(f"graph: {g.n} nodes, {g.e} directed edges (bi-directed)")
+
+    # --- preprocessing (Algorithms 1 & 3) --------------------------------
+    P = 4  # query processors
+    li = build_landmark_index(g, n_processors=P, n_landmarks=32, min_separation=3)
+    print(f"landmarks: {len(li.landmarks)}; router table d(u,p): "
+          f"{li.dist_to_proc.shape} = O(nP) ints")
+    ge = build_graph_embedding(
+        li.dist_to_lm, li.landmarks, EmbedConfig(dim=10, lm_steps=300, node_steps=120))
+    print(f"embedding: {ge.coords.shape} = O(nD) floats; "
+          f"rel. distance error {ge.rel_error(li.dist_to_lm):.3f}")
+
+    # --- serve a 2-hop-hotspot, 3-hop-traversal workload ------------------
+    wl = hotspot_workload(g, r=2, n_hotspots=60, queries_per_hotspot=10, seed=1)
+    print(f"workload: {wl.query_nodes.size} queries "
+          f"({len(set(wl.hotspot_id.tolist()))} hotspots)")
+    balls = BallCache(g)
+    print(f"{'scheme':>10s}  {'qps':>9s}  {'resp_ms':>8s}  {'hit':>6s}  stolen")
+    for scheme in ("no_cache", "next_ready", "hash", "landmark", "embed"):
+        rt = SimRouter(P, SimRouterConfig(scheme=scheme),
+                       landmark_index=li, embedding=ge)
+        sim = ServingSimulator(g, P, rt, cache_entries=400, h=3,
+                               use_cache=(scheme != "no_cache"), ball_cache=balls)
+        r = sim.run(wl)
+        print(f"{scheme:>10s}  {r.throughput_qps:9.1f}  {r.mean_response_ms:8.3f}  "
+              f"{r.hit_rate:6.3f}  {r.stolen}")
+    print("\nsmart routing (landmark/embed) should show the highest hit rates"
+          "\nand lowest response times -- the paper's core claim.")
+
+
+if __name__ == "__main__":
+    main()

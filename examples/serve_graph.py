@@ -1,0 +1,91 @@
+"""Batched graph-query serving on the REAL device execution path.
+
+Unlike quickstart.py (event-driven simulator), this runs the jit'd
+shard_map serving step -- set-associative caches, batched h-hop BFS
+(Algorithm 5), multi_read through the decoupled storage tier -- over
+request batches routed by the embed router, printing per-burst cache
+hit rates as the caches warm.
+
+    PYTHONPATH=src python examples/serve_graph.py [--bursts 8]
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.embedding import EmbedConfig, build_graph_embedding
+from repro.core.landmarks import build_landmark_index
+from repro.core.router import Router, RouterConfig
+from repro.core.storage import build_storage, make_serving_storage
+from repro.core.workloads import hotspot_workload
+from repro.graph.csr import to_padded
+from repro.graph.generators import powerlaw_graph
+from repro.serve.graph_serving import (
+    GServeConfig, make_distributed_serve_step, make_processor_caches,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bursts", type=int, default=8)
+    ap.add_argument("--nodes", type=int, default=4000)
+    ap.add_argument("--hops", type=int, default=2)
+    args = ap.parse_args()
+
+    g = powerlaw_graph(n=args.nodes, m=6, seed=0)
+    adj = to_padded(g, max_degree=16)
+    tier = build_storage(adj, n_shards=1)
+    print(f"graph: {g.n} nodes; storage rows {adj.n_rows} "
+          f"(incl. {adj.n_rows - g.n} continuation rows)")
+
+    li = build_landmark_index(g, n_processors=1, n_landmarks=24)
+    ge = build_graph_embedding(li.dist_to_lm, li.landmarks,
+                               EmbedConfig(dim=8, lm_steps=200, node_steps=80))
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    qpp = 32
+    cfg = GServeConfig(
+        n_nodes=g.n, n_rows=adj.n_rows, row_width=adj.max_degree,
+        n_storage_shards=1, queries_per_proc=qpp, hops=args.hops,
+        max_frontier=1024, cache_sets=2048, cache_ways=4,
+        read_capacity=4096, chain_depth=8,
+    )
+    step = jax.jit(make_distributed_serve_step(mesh, cfg))
+    store = make_serving_storage(tier)
+
+    router = Router(1, RouterConfig(scheme="embed"), embedding=ge)
+    rstate = router.init_state()
+    wl = hotspot_workload(g, r=1, n_hotspots=6, queries_per_hotspot=qpp, seed=1)
+
+    inputs = {
+        "rows": store["rows"], "deg": store["deg"], "cont": store["cont"],
+        "owner": store["owner"], "loc": store["loc"],
+        "coords": jnp.asarray(ge.coords),
+        "ema": jnp.zeros((1, ge.coords.shape[1]), jnp.float32),
+        "cache": make_processor_caches(mesh, cfg),
+    }
+    print(f"{'burst':>5s} {'queries':>8s} {'touched':>8s} {'misses':>8s} {'hit%':>6s}")
+    with mesh:
+        for b in range(args.bursts):
+            q = wl.query_nodes[(b * qpp) % wl.query_nodes.size:][:qpp]
+            if q.size < qpp:
+                q = np.resize(q, qpp)
+            rstate, _ = router.route_batch(rstate, jnp.asarray(q))
+            counts, ema, cache, stats = step(
+                dict(inputs, queries=jnp.asarray(q[None, :])))
+            inputs["cache"], inputs["ema"] = cache, ema
+            touched, missed = np.asarray(stats)  # per-burst totals
+            hit = 100 * (1 - missed / max(touched, 1))
+            print(f"{b:5d} {qpp:8d} {int(touched):8d} {int(missed):8d} {hit:6.1f}")
+    print("\nhit rate climbs as the processor cache captures the hotspots --")
+    print("Algorithm 5 (cache-first BFS + batched multi_read) end to end.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""GraphCast weather mode at toy scale: encoder-processor-decoder over an
+icosahedral multimesh (grid2mesh -> 16 interaction layers -> mesh2grid),
+trained to predict a synthetic smooth field's next state.
+
+    PYTHONPATH=src python examples/weather_graphcast.py [--steps 60]
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graph.generators import icosahedral_multimesh
+from repro.models.gnn import graphcast
+from repro.models.param import init_params, param_count
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--refinement", type=int, default=2)
+    ap.add_argument("--vars", type=int, default=8)
+    args = ap.parse_args()
+
+    mm = icosahedral_multimesh(refinement=args.refinement, grid_per_mesh=3)
+    print(f"multimesh: {mm.n_mesh} mesh nodes ({mm.mesh_src.size} edges, "
+          f"all refinement levels), {mm.n_grid} grid points")
+
+    cfg = graphcast.GraphCastConfig(
+        n_layers=4, d_hidden=64, n_vars=args.vars, d_in=args.vars,
+        n_out=args.vars, mode="weather")
+    params = init_params(graphcast.param_specs(cfg), jax.random.PRNGKey(0))
+    print(f"params: {param_count(graphcast.param_specs(cfg)) / 1e6:.2f}M")
+
+    # synthetic dynamics: state rotates through smooth harmonics
+    rng = np.random.default_rng(0)
+    basis = rng.standard_normal((mm.n_grid, args.vars)).astype(np.float32)
+
+    def batch_fn(step):
+        t = step * 0.1
+        x = np.sin(t) * basis + 0.5 * np.cos(2 * t) * np.roll(basis, 1, 1)
+        y = np.sin(t + 0.1) * basis + 0.5 * np.cos(2 * (t + 0.1)) * np.roll(basis, 1, 1)
+        return {
+            "grid_feat": x, "grid_target": y,
+            "mesh_src": mm.mesh_src, "mesh_dst": mm.mesh_dst,
+            "g2m_src": mm.g2m_src, "g2m_dst": mm.g2m_dst,
+            "m2g_src": mm.m2g_src, "m2g_dst": mm.m2g_dst,
+        }
+
+    # n_mesh is a static shape parameter -> close over it (not a batch leaf)
+    def loss(p, b):
+        return graphcast.loss_fn(p, dict(b, n_mesh=mm.n_mesh), cfg)
+
+    step_fn = make_train_step(loss, warmup=10, total_steps=args.steps,
+                              donate=False)
+    state = init_train_state(params)
+    losses = []
+    for step in range(args.steps):
+        b = {k: jnp.asarray(v) for k, v in batch_fn(step).items()}
+        state, m = step_fn(state, b)
+        losses.append(float(m["loss"]))
+        if step % 10 == 0:
+            print(f"step {step:4d}  mse {losses[-1]:.4f}")
+    print(f"mse {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({'improved' if losses[-1] < losses[0] else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""gRouting-JAX: smart query routing for distributed graph querying with decoupled storage.
+
+A production-grade JAX framework reproducing and extending
+Khan, Segovia, Kossmann, "Let's Do Smart Routing: For Distributed Graph
+Querying with Decoupled Storage" (2016).
+
+Layers:
+  repro.core         -- the paper's contribution (routers, cache, storage, query engine)
+  repro.graph        -- graph substrate (CSR, generators, partitioners, samplers)
+  repro.models       -- LM transformers (dense + MoE), GNNs, recsys
+  repro.kernels      -- Pallas TPU kernels + jnp oracles
+  repro.optim/train/serve/checkpoint/distributed -- training & serving substrate
+  repro.configs      -- assigned architecture configs
+  repro.launch       -- mesh / dryrun / train / serve entry points
+  repro.analysis     -- HLO collective parsing + roofline
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,3 @@
+"""Sharded checkpointing with manifest + elastic re-sharding."""
+
+from repro.checkpoint.checkpointer import Checkpointer, save_checkpoint, restore_checkpoint

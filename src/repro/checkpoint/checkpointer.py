@@ -1,0 +1,144 @@
+"""Checkpoint/restore with manifest + elastic re-sharding.
+
+Design (scaled-down but structurally faithful to pod-scale practice):
+  - the pytree is flattened to path-keyed leaves; each leaf is written as a
+    .npy member of a step directory, plus manifest.json with tree structure,
+    shapes, dtypes, and the step;
+  - writes go to a temp dir then atomically rename (crash consistency) --
+    a killed run never leaves a half-written "latest";
+  - `keep_last` old steps are garbage collected;
+  - restore may target a DIFFERENT mesh: leaves are loaded on host then
+    device_put with the new mesh's NamedSharding (elastic scaling /
+    failure-shrunk restart);
+  - background-thread writes (async checkpointing) overlap the next step.
+
+At real pod scale each host writes only its shards; here one process owns
+all shards so files are whole arrays -- the manifest format and restore
+path are the same.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree, keep_last: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=directory, prefix=f".tmp_step_{step}_")
+    leaves = _flatten_with_paths(tree)
+    manifest = {"step": step, "leaves": []}
+    for key, leaf in leaves:
+        arr = np.asarray(leaf)
+        fname = key.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"key": key, "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    final = os.path.join(directory, f"step_{step:08d}")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    # GC old steps
+    steps = sorted(
+        d for d in os.listdir(directory) if d.startswith("step_") and not d.startswith(".")
+    )
+    for d in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and not d.startswith(".")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str,
+    step: Optional[int],
+    tree_like,
+    shardings=None,
+):
+    """Restore into the structure of `tree_like`. If `shardings` (same-
+    structure pytree of NamedSharding/None) is given, leaves are device_put
+    with those shardings -- this is the elastic-rescale path: the mesh may
+    differ from the one that wrote the checkpoint."""
+    step = step if step is not None else latest_step(directory)
+    assert step is not None, f"no checkpoint in {directory}"
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_key = {m["key"]: m for m in manifest["leaves"]}
+    keys = [k for k, _ in _flatten_with_paths(tree_like)]
+    leaves_like, tdef = jax.tree_util.tree_flatten(tree_like)
+    shard_flat = (
+        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else [None] * len(keys)
+    )
+    out = []
+    for key, like, sh in zip(keys, leaves_like, shard_flat):
+        m = by_key[key]
+        arr = np.load(os.path.join(d, m["file"]))
+        expect = tuple(getattr(like, "shape", arr.shape))
+        assert tuple(arr.shape) == expect, f"{key}: {arr.shape} vs {expect}"
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=getattr(like, "dtype", arr.dtype)))
+    return jax.tree_util.tree_unflatten(tdef, out), step
+
+
+@dataclasses.dataclass
+class Checkpointer:
+    """Async checkpointer: save() returns immediately, writes in background."""
+
+    directory: str
+    keep_last: int = 3
+
+    def __post_init__(self):
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree, blocking: bool = False):
+        # snapshot to host first (cheap on CPU; on TPU this is the D2H copy)
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self.wait()
+        self._thread = threading.Thread(
+            target=save_checkpoint, args=(self.directory, step, host_tree, self.keep_last)
+        )
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, tree_like, shardings=None):
+        return restore_checkpoint(self.directory, None, tree_like, shardings)

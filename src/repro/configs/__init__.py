@@ -1,0 +1,44 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+10 assigned architectures + the paper's own system (grouting). Every entry
+exposes full config, reduced smoke config, its shape cells, and a dry-run
+builder (see configs/base.py)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ArchDef, Cell, DryRunSpec
+
+_MODULES = {
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    "egnn": "repro.configs.egnn",
+    "pna": "repro.configs.pna",
+    "equiformer-v2": "repro.configs.equiformer_v2",
+    "graphcast": "repro.configs.graphcast",
+    "din": "repro.configs.din",
+    "grouting": "repro.configs.grouting",
+}
+
+ASSIGNED = [k for k in _MODULES if k != "grouting"]  # the 10 graded archs
+
+
+def get_arch(name: str) -> ArchDef:
+    import importlib
+
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).ARCH
+
+
+def all_cells(include_grouting: bool = True):
+    """Yield (arch_name, Cell) for every registered cell."""
+    names = list(_MODULES) if include_grouting else ASSIGNED
+    for n in names:
+        arch = get_arch(n)
+        for c in arch.cells:
+            yield n, c

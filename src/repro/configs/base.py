@@ -1,0 +1,463 @@
+"""Config registry substrate: cells, dry-run specs, per-family builders.
+
+Every assigned architecture is a module in this package exposing ``ARCH``
+(an ArchDef). A cell = (architecture x input shape); ``build_dryrun``
+returns everything ``launch/dryrun.py`` needs to lower + compile that cell
+on a given mesh: the step function, abstract (ShapeDtypeStruct) inputs, and
+NamedShardings. Reduced "smoke" configs for CPU tests come from
+``smoke_model_cfg`` / the family builders with ``smoke=True``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.mesh_utils import (
+    DEFAULT_RULES,
+    LogicalRules,
+    resolve_pspec,
+    set_mesh_rules,
+)
+from repro.models.param import abstract_params, param_pspecs, param_count
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    shape: str  # e.g. "train_4k"
+    kind: str  # train | prefill | decode | serve | retrieval
+    skip: Optional[str] = None  # reason this cell does not run for the arch
+    rules: Optional[Dict[str, Any]] = None  # logical-rule overrides
+    meta: Optional[Dict[str, Any]] = None
+
+
+@dataclasses.dataclass
+class DryRunSpec:
+    """What the dry-run lowers: jit(fn, in_shardings).lower(*args).compile()."""
+
+    fn: Callable
+    args: tuple  # abstract args (ShapeDtypeStructs)
+    in_shardings: Any
+    rules: Dict[str, Any]  # resolved logical rules used (for the report)
+    meta: Dict[str, Any]  # model_flops, param_count, tokens, notes
+    out_shardings: Any = None  # None = let XLA choose
+    donate: tuple = ()  # argnums donated (decode: the KV cache updates in place)
+
+
+@dataclasses.dataclass
+class ArchDef:
+    name: str
+    family: str  # lm | gnn | recsys | grouting
+    cells: Tuple[Cell, ...]
+    model_cfg: Callable[[], Any]  # full-size config
+    smoke_cfg: Callable[[], Any]  # reduced config for CPU smoke tests
+    build_dryrun: Callable[[str, Mesh], DryRunSpec]  # (shape_name, mesh)
+
+    def cell(self, shape: str) -> Cell:
+        for c in self.cells:
+            if c.shape == shape:
+                return c
+        raise KeyError(f"{self.name}: unknown shape {shape}")
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def merged_rules(overrides: Optional[Dict[str, Any]]) -> Dict[str, Any]:
+    r = dict(DEFAULT_RULES)
+    if overrides:
+        r.update(overrides)
+    return r
+
+
+def bind_rules(fn, mesh: Mesh, rules: Dict[str, Any]):
+    """Make the logical-rules context active DURING TRACING of fn.
+
+    shard_constraint reads a thread-local at trace time; jit(...).lower()
+    traces long after the builder's `with set_mesh_rules(...)` exits, so the
+    returned step functions must re-enter the context themselves -- without
+    this every activation sharding constraint silently becomes a no-op and
+    XLA is free to replicate the token dimension (observed: 16x activation
+    blow-up and contraction-dim resharding on the 16x16 mesh)."""
+
+    def wrapped(*args):
+        with set_mesh_rules(mesh, rules):
+            return fn(*args)
+
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# LM family builder
+# ---------------------------------------------------------------------------
+
+LM_TRAIN_RULES = {
+    "batch": ("pod", "data"),
+    "embed": "data",  # FSDP: parameters/optimizer sharded over data
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+}
+
+LM_DECODE_RULES = dict(
+    LM_TRAIN_RULES,
+    **{"kv_seq": "model", "kv_heads": None},  # sequence-parallel KV cache
+)
+
+LM_LONG_DECODE_RULES = dict(
+    LM_TRAIN_RULES,
+    **{"batch": None, "kv_seq": ("data", "model"), "kv_heads": None},
+)
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256, rules=LM_TRAIN_RULES),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32, rules=LM_TRAIN_RULES),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128, rules=LM_DECODE_RULES),
+    "long_500k": dict(kind="decode", seq=524288, batch=1, rules=LM_LONG_DECODE_RULES),
+}
+
+
+def lm_cells(long_ok: bool, long_skip_reason: str = "") -> Tuple[Cell, ...]:
+    cells = []
+    for shape, d in LM_SHAPES.items():
+        skip = None
+        if shape == "long_500k" and not long_ok:
+            skip = long_skip_reason or (
+                "pure full-attention arch: no sub-quadratic path for 500k decode "
+                "(DESIGN.md §Arch-applicability)"
+            )
+        cells.append(Cell(shape=shape, kind=d["kind"], skip=skip, rules=d["rules"]))
+    return tuple(cells)
+
+
+def lm_model_flops(cfg, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (fwd); N = active params."""
+    from repro.models.param import param_count as pc
+    from repro.models.transformer import lm_param_specs
+    from repro.models.moe import moe_param_specs
+
+    n_total = pc(lm_param_specs(cfg))
+    if cfg.moe:
+        # subtract non-active expert params: active = top_k/n_experts of routed
+        moe_p = pc(moe_param_specs(cfg.moe_cfg())) * cfg.n_layers
+        shared = 0
+        if cfg.d_ff_shared:
+            shared = 3 * cfg.d_model * cfg.d_ff_shared * cfg.n_layers
+        routed = 3 * cfg.n_experts_padded * cfg.d_model * cfg.d_ff_expert * cfg.n_layers
+        router = cfg.d_model * cfg.n_experts * cfg.n_layers
+        active_routed = routed * cfg.top_k / cfg.n_experts_padded
+        n_active = n_total - routed + active_routed
+    else:
+        n_active = n_total
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def build_lm_dryrun(arch_mod_cfg, shape: str, mesh: Mesh, cell: Cell, mode: str = "memory") -> DryRunSpec:
+    from repro.models import transformer as T
+    from repro.optim.adamw import abstract_opt_state, opt_state_pspecs
+    from repro.train.train_step import TrainState
+
+    cfg = arch_mod_cfg
+    n_groups_full = cfg.n_layers // cfg.group_size
+    if mode.startswith("flops"):
+        # exact per-step HLO flop/byte/collective counting: cost_analysis
+        # counts a rolled loop body ONCE, so unroll the layer scan, drop the
+        # microbatch scan, and disable the q-chunk/CE-chunk lax.maps (same
+        # computation; the memory-mode lowering proves the HBM fit).
+        # flops1/flops2 lower 1-group / 2-group variants: every count is
+        # linear in depth, so the full-depth module's counts are the exact
+        # two-point extrapolation  M1 + (G-1) * (M2 - M1)  at a fraction of
+        # the compile time (dryrun.py combines them).
+        k = {"flops": n_groups_full, "flops1": 1, "flops2": 2}[mode]
+        cfg = dataclasses.replace(
+            cfg, scan_unroll=True, grad_accum=1, attn_chunk=False,
+            xent_chunk=1 << 30, n_layers=k * cfg.group_size,
+        )
+    d = LM_SHAPES[shape]
+    rules = merged_rules(cell.rules)
+    seq, batch = d["seq"], d["batch"]
+    with set_mesh_rules(mesh, rules) as lr:
+        specs = T.lm_param_specs(cfg)
+        ap = abstract_params(specs)
+        pspecs = param_pspecs(specs, lr)
+        n_params = param_count(specs)
+        sds = jax.ShapeDtypeStruct
+
+        if cell.kind == "train":
+            state = TrainState(
+                params=ap,
+                opt_state=abstract_opt_state(ap),
+                step=sds((), jnp.int32),
+            )
+            state_sh = TrainState(
+                params=pspecs, opt_state=opt_state_pspecs(pspecs), step=P()
+            )
+            batch_abs = {
+                "tokens": sds((batch, seq), jnp.int32),
+                "labels": sds((batch, seq), jnp.int32),
+            }
+            batch_sh = {
+                "tokens": resolve_pspec(("batch", "seq"), (batch, seq), lr),
+                "labels": resolve_pspec(("batch", "seq"), (batch, seq), lr),
+            }
+            from repro.optim.adamw import AdamWConfig, adamw_update
+            from repro.optim.schedule import warmup_cosine
+            from repro.train.train_step import accum_value_and_grad
+
+            opt_cfg = AdamWConfig()
+            vg = accum_value_and_grad(lambda p, bb: T.loss_fn(p, bb, cfg), cfg.grad_accum)
+
+            def train_step(st, b):
+                (loss, metrics), grads = vg(st.params, b)
+                lr_now = warmup_cosine(st.step, opt_cfg.lr, 100, 10_000)
+                new_p, new_o, om = adamw_update(grads, st.opt_state, st.params, opt_cfg, lr=lr_now)
+                return TrainState(params=new_p, opt_state=new_o, step=st.step + 1), dict(
+                    metrics, loss=loss, **om
+                )
+
+            return DryRunSpec(
+                fn=bind_rules(train_step, mesh, rules),
+                args=(state, batch_abs),
+                in_shardings=(named(mesh, state_sh), named(mesh, batch_sh)),
+                out_shardings=(named(mesh, state_sh), None),
+                rules=rules,
+                meta={
+                    "params": n_params,
+                    "tokens": batch * seq,
+                    "seq": seq,
+                    "n_groups": n_groups_full,
+                    "model_flops": lm_model_flops(cfg, batch * seq, "train"),
+                    "kind": "train",
+                },
+            )
+
+        if cell.kind == "prefill":
+            icfg = dataclasses.replace(cfg, remat=False)
+            tok = sds((batch, seq), jnp.int32)
+            tok_sh = resolve_pspec(("batch", "seq"), (batch, seq), lr)
+
+            def prefill(params, tokens):
+                return T.prefill_forward(params, tokens, icfg)
+
+            return DryRunSpec(
+                fn=bind_rules(prefill, mesh, rules),
+                args=(ap, tok),
+                in_shardings=(named(mesh, pspecs), NamedSharding(mesh, tok_sh)),
+                rules=rules,
+                meta={
+                    "params": n_params,
+                    "tokens": batch * seq,
+                    "seq": seq,
+                    "n_groups": n_groups_full,
+                    "model_flops": lm_model_flops(cfg, batch * seq, "prefill"),
+                    "kind": "prefill",
+                },
+            )
+
+        # decode: one new token against a seq-long KV cache
+        icfg = dataclasses.replace(cfg, remat=False)
+        kv_abs = T.abstract_kv_cache(icfg, batch, seq)
+        kv_sh = T.kv_cache_pspecs(icfg, batch, seq, lr)
+        tok = sds((batch, 1), jnp.int32)
+        tok_sh = resolve_pspec(("batch", None), (batch, 1), lr)
+
+        def decode(params, kv, tokens):
+            return T.serve_step(params, kv, tokens, icfg)
+
+        return DryRunSpec(
+            fn=bind_rules(decode, mesh, rules),
+            args=(ap, kv_abs, tok),
+            donate=(1,),  # KV cache updates in place (halves decode memory)
+            in_shardings=(
+                named(mesh, pspecs),
+                named(mesh, kv_sh),
+                NamedSharding(mesh, tok_sh),
+            ),
+            rules=rules,
+            meta={
+                "params": n_params,
+                "tokens": batch,
+                "model_flops": lm_model_flops(cfg, batch, "decode"),
+                "kind": "decode",
+            },
+        )
+
+
+# ---------------------------------------------------------------------------
+# GNN family builder
+# ---------------------------------------------------------------------------
+
+GNN_RULES = {"nodes": ("data", "model"), "edges": ("data", "model")}
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(kind="train", n_nodes=2708, n_edges=10556, d_feat=1433, n_out=7),
+    "minibatch_lg": dict(
+        kind="train", n_nodes=232_965, n_edges=114_615_892, batch_nodes=1024,
+        fanout=(15, 10), d_feat=602, n_out=41,
+    ),
+    "ogb_products": dict(
+        kind="train", n_nodes=2_449_029, n_edges=61_859_140, d_feat=100, n_out=47,
+        distributed=True,
+    ),
+    "molecule": dict(kind="train", n_nodes=30, n_edges=64, batch=128, d_feat=16),
+}
+
+
+def gnn_cells() -> Tuple[Cell, ...]:
+    return tuple(
+        Cell(shape=s, kind=d["kind"], rules=GNN_RULES) for s, d in GNN_SHAPES.items()
+    )
+
+
+def _gnn_batch_abstract(shape: str, d: dict, needs_pos: bool, lr) -> Tuple[dict, dict]:
+    """(abstract batch, pspec tree) for the pjit'd (non-distributed) cells."""
+    sds = jax.ShapeDtypeStruct
+    if shape == "molecule":
+        n = d["batch"] * d["n_nodes"]
+        e = d["batch"] * d["n_edges"] * 2  # bidirected
+        batch = {
+            "node_feat": sds((n, d["d_feat"]), jnp.float32),
+            "node_pos": sds((n, 3), jnp.float32),
+            "src": sds((e,), jnp.int32),
+            "dst": sds((e,), jnp.int32),
+            "graph_id": sds((n,), jnp.int32),
+            "graph_targets": sds((d["batch"], 1), jnp.float32),
+            "labels": sds((n,), jnp.int32),
+            "node_target": sds((n, 1), jnp.float32),
+        }
+    elif shape == "minibatch_lg":
+        from repro.graph.sampler import sampled_shape
+
+        max_nodes, max_edges = sampled_shape(d["batch_nodes"], d["fanout"])
+        batch = {
+            "node_feat": sds((max_nodes, d["d_feat"]), jnp.float32),
+            "node_pos": sds((max_nodes, 3), jnp.float32),
+            "src": sds((max_edges,), jnp.int32),
+            "dst": sds((max_edges,), jnp.int32),
+            "labels": sds((max_nodes,), jnp.int32),
+            "seed_mask": sds((max_nodes,), jnp.float32),
+        }
+    else:  # full_graph_sm
+        n, e = d["n_nodes"], d["n_edges"]
+        batch = {
+            "node_feat": sds((n, d["d_feat"]), jnp.float32),
+            "node_pos": sds((n, 3), jnp.float32),
+            "src": sds((e,), jnp.int32),
+            "dst": sds((e,), jnp.int32),
+            "labels": sds((n,), jnp.int32),
+        }
+    if not needs_pos:
+        batch.pop("node_pos", None)
+    ax = {
+        "node_feat": ("nodes", None),
+        "node_pos": ("nodes", None),
+        "src": ("edges",),
+        "dst": ("edges",),
+        "graph_id": ("nodes",),
+        "graph_targets": (None, None),
+        "labels": ("nodes",),
+        "seed_mask": ("nodes",),
+        "node_target": ("nodes", None),
+    }
+    pspecs = {
+        k: resolve_pspec(ax[k], v.shape, lr) for k, v in batch.items()
+    }
+    return batch, pspecs
+
+
+def build_gnn_dryrun(
+    arch_name: str, model_mod, model_cfg, shape: str, mesh: Mesh, cell: Cell,
+    needs_pos: bool, mode: str = "memory",
+) -> DryRunSpec:
+    from repro.models.param import abstract_params as apf, param_pspecs as ppf
+    from repro.optim.adamw import (
+        AdamWConfig, abstract_opt_state, adamw_update, opt_state_pspecs,
+    )
+    from repro.train.train_step import TrainState
+
+    d = GNN_SHAPES[shape]
+    n_layers_full = model_cfg.n_layers
+    if mode in ("flops1", "flops2"):
+        model_cfg = dataclasses.replace(
+            model_cfg, n_layers={"flops1": 1, "flops2": 2}[mode])
+    rules = merged_rules(cell.rules)
+    with set_mesh_rules(mesh, rules) as lr:
+        specs = model_mod.param_specs(model_cfg)
+        ap = apf(specs)
+        n_params = param_count(specs)
+        # GNN params are small: replicate (the graph is the sharded object)
+        pspecs = jax.tree.map(lambda s: P(), ap)
+        opt_cfg = AdamWConfig(weight_decay=0.0)
+
+        if d.get("distributed"):
+            from repro.models.gnn.distributed import (
+                abstract_dist_inputs, dist_input_pspecs, make_dist_gnn_loss,
+                plan_dist_graph,
+            )
+
+            axes = tuple(a for a in ("data", "model") if a in mesh.shape)
+            dcfg = plan_dist_graph(
+                d["n_nodes"], d["n_edges"], dict(mesh.shape),
+                d_feat=d["d_feat"], n_out=d["n_out"],
+                edge_chunk=(1 << 30) if mode.startswith("flops")
+                else (16384 if arch_name == "equiformer-v2" else 32768),
+                axes=axes, unroll=False,
+            )
+            inputs = abstract_dist_inputs(dcfg, with_pos=needs_pos)
+            ispecs = dist_input_pspecs(dcfg, with_pos=needs_pos)
+            loss_fn = make_dist_gnn_loss(arch_name, mesh, dcfg, model_cfg)
+        else:
+            inputs, ispecs = _gnn_batch_abstract(shape, d, needs_pos, lr)
+            loss_fn = lambda p, b: model_mod.loss_fn(p, b, model_cfg)
+
+        state = TrainState(params=ap, opt_state=abstract_opt_state(ap),
+                           step=jax.ShapeDtypeStruct((), jnp.int32))
+        state_sh = TrainState(params=pspecs, opt_state=opt_state_pspecs(pspecs), step=P())
+
+        def train_step(st, b):
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                st.params, b
+            )
+            new_p, new_o, om = adamw_update(grads, st.opt_state, st.params, opt_cfg)
+            return TrainState(params=new_p, opt_state=new_o, step=st.step + 1), dict(
+                metrics, loss=loss, **om
+            )
+
+        # MODEL_FLOPS for message passing ~= 6 * (per-edge MLP flops * E +
+        # per-node MLP flops * N) -- computed as 6 * params_touched * items
+        if shape == "molecule":
+            e_eff = d["batch"] * d["n_edges"] * 2
+            n_eff = d["batch"] * d["n_nodes"]
+        elif shape == "minibatch_lg":
+            e_eff, n_eff = 168_960, 169_984
+        else:
+            e_eff, n_eff = d["n_edges"], d["n_nodes"]
+        return DryRunSpec(
+            fn=bind_rules(train_step, mesh, rules),
+            args=(state, inputs),
+            in_shardings=(named(mesh, state_sh), named(mesh, ispecs)),
+            out_shardings=(named(mesh, state_sh), None),
+            rules=rules,
+            meta={
+                "params": n_params,
+                "tokens": n_eff,
+                "edges": e_eff,
+                "n_groups": n_layers_full,
+                "model_flops": 6.0 * n_params * (e_eff + n_eff) / max(n_eff, 1),
+                "kind": "train",
+                "distributed": bool(d.get("distributed")),
+            },
+        )

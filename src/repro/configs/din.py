@@ -1,0 +1,156 @@
+"""din [arXiv:1706.06978]: embed_dim=18 seq_len=100 attn_mlp=80-40
+mlp=200-80, interaction = target attention.
+
+Shapes: train_batch (B=65,536), serve_p99 (B=512), serve_bulk (B=262,144),
+retrieval_cand (batch=1 x 1,000,000 candidates, batched-dot scoring).
+
+The embedding tables are the decoupled storage tier: vocab rows sharded over
+the "storage" -> model axis, exactly like gRouting adjacency rows
+(DESIGN.md §4)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base
+from repro.configs.base import ArchDef, Cell, DryRunSpec, bind_rules, merged_rules, named
+from repro.distributed.mesh_utils import resolve_pspec, set_mesh_rules
+from repro.models.recsys import din as model
+from repro.models.param import abstract_params, param_count, param_pspecs
+
+DIN_RULES = {"batch": ("pod", "data"), "storage": "model", "cand": ("data", "model")}
+
+SHAPES = {
+    "train_batch": dict(kind="train", batch=65_536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262_144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=1_000_000),
+}
+
+
+def model_cfg() -> model.DINConfig:
+    return model.DINConfig(
+        embed_dim=18, seq_len=100, n_items=1_048_576, n_cats=16_384,
+        attn_hidden=(80, 40), mlp_hidden=(200, 80), d_profile=8,
+    )
+
+
+def smoke_cfg() -> model.DINConfig:
+    return model.DINConfig(
+        embed_dim=8, seq_len=12, n_items=1024, n_cats=64,
+        attn_hidden=(16, 8), mlp_hidden=(24, 12), d_profile=4,
+    )
+
+
+def _batch_abstract(shape: str, cfg: model.DINConfig, lr):
+    sds = jax.ShapeDtypeStruct
+    d = SHAPES[shape]
+    if shape == "retrieval_cand":
+        nc = d["n_candidates"]
+        b = {
+            "hist_items": sds((1, cfg.seq_len), jnp.int32),
+            "hist_cats": sds((1, cfg.seq_len), jnp.int32),
+            "profile": sds((1, cfg.d_profile), jnp.float32),
+            "cand_items": sds((nc,), jnp.int32),
+            "cand_cats": sds((nc,), jnp.int32),
+        }
+        ax = {
+            "hist_items": (None, None), "hist_cats": (None, None),
+            "profile": (None, None), "cand_items": ("cand",), "cand_cats": ("cand",),
+        }
+    else:
+        B = d["batch"]
+        b = {
+            "hist_items": sds((B, cfg.seq_len), jnp.int32),
+            "hist_cats": sds((B, cfg.seq_len), jnp.int32),
+            "cand_item": sds((B,), jnp.int32),
+            "cand_cat": sds((B,), jnp.int32),
+            "profile": sds((B, cfg.d_profile), jnp.float32),
+            "label": sds((B,), jnp.int32),
+        }
+        ax = {
+            "hist_items": ("batch", None), "hist_cats": ("batch", None),
+            "cand_item": ("batch",), "cand_cat": ("batch",),
+            "profile": ("batch", None), "label": ("batch",),
+        }
+        if shape != "train_batch":
+            b.pop("label"); ax.pop("label")
+    pspecs = {k: resolve_pspec(ax[k], v.shape, lr) for k, v in b.items()}
+    return b, pspecs
+
+
+def build_dryrun(shape: str, mesh, mode: str = "memory") -> DryRunSpec:
+    from repro.optim.adamw import (
+        AdamWConfig, abstract_opt_state, adamw_update, opt_state_pspecs,
+    )
+    from repro.train.train_step import TrainState
+
+    cfg = model_cfg()
+    cell = ARCH.cell(shape)
+    rules = merged_rules(cell.rules)
+    with set_mesh_rules(mesh, rules) as lr:
+        specs = model.param_specs(cfg)
+        ap = abstract_params(specs)
+        pspecs = param_pspecs(specs, lr)
+        n_params = param_count(specs)
+        batch_abs, batch_sh = _batch_abstract(shape, cfg, lr)
+        d = SHAPES[shape]
+
+        # MODEL_FLOPS: per-example = attention MLP over L steps + main MLP
+        din_in = 2 * cfg.embed_dim
+        attn_dims = (4 * din_in,) + tuple(cfg.attn_hidden) + (1,)
+        mlp_dims = (2 * din_in + cfg.d_profile,) + tuple(cfg.mlp_hidden) + (1,)
+        attn_f = sum(a * b for a, b in zip(attn_dims[:-1], attn_dims[1:]))
+        mlp_f = sum(a * b for a, b in zip(mlp_dims[:-1], mlp_dims[1:]))
+        items = d.get("n_candidates", d["batch"])
+        per_ex = 2 * (cfg.seq_len * attn_f + mlp_f)
+        mult = 3.0 if cell.kind == "train" else 1.0
+
+        if cell.kind == "train":
+            state = TrainState(params=ap, opt_state=abstract_opt_state(ap),
+                               step=jax.ShapeDtypeStruct((), jnp.int32))
+            state_sh = TrainState(params=pspecs, opt_state=opt_state_pspecs(pspecs),
+                                  step=P())
+            opt_cfg = AdamWConfig(weight_decay=0.0)
+
+            def train_step(st, b):
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p, bb: model.loss_fn(p, bb, cfg), has_aux=True
+                )(st.params, b)
+                new_p, new_o, om = adamw_update(grads, st.opt_state, st.params, opt_cfg)
+                return TrainState(new_p, new_o, st.step + 1), dict(metrics, loss=loss, **om)
+
+            return DryRunSpec(
+                fn=bind_rules(train_step, mesh, rules), args=(state, batch_abs),
+                in_shardings=(named(mesh, state_sh), named(mesh, batch_sh)),
+                rules=rules,
+                meta={"params": n_params, "tokens": items,
+                      "model_flops": mult * per_ex * items, "kind": "train"},
+            )
+
+        if cell.kind == "retrieval":
+            fn = lambda p, b: model.retrieval_scores(p, b, cfg)
+            # retrieval approximates with the candidate-independent user vec
+            per_ex = 2 * mlp_f
+        else:
+            fn = lambda p, b: model.score(p, b, cfg)
+
+        return DryRunSpec(
+            fn=bind_rules(fn, mesh, rules), args=(ap, batch_abs),
+            in_shardings=(named(mesh, pspecs), named(mesh, batch_sh)),
+            rules=rules,
+            meta={"params": n_params, "tokens": items,
+                  "model_flops": per_ex * items, "kind": cell.kind},
+        )
+
+
+ARCH = ArchDef(
+    name="din",
+    family="recsys",
+    cells=tuple(Cell(shape=s, kind=d["kind"], rules=DIN_RULES) for s, d in SHAPES.items()),
+    model_cfg=model_cfg,
+    smoke_cfg=smoke_cfg,
+    build_dryrun=build_dryrun,
+)

@@ -1,0 +1,91 @@
+"""The paper's primary contribution: smart query routing over decoupled
+graph storage (gRouting), TPU-native.
+
+Modules:
+  landmarks     -- Algorithm 1: landmark selection + multi-source BFS + pivots
+  embedding     -- Algorithm 3: graph embedding minimizing relative distance error
+  router        -- Algorithms 2 & 4 + baselines (next_ready, hash) [JAX]
+  cache         -- set-associative LRU processor cache [JAX pytree]
+  storage       -- decoupled storage tier; RAMCloud multi_read as all_to_all
+  query_engine  -- Algorithm 5: batched h-hop BFS / random walk / reachability
+  dispatch      -- capacity-aware dispatch shared with MoE (query stealing)
+  workloads     -- hotspot / concentrated / uniform query streams
+  costmodel     -- calibrated service-time model (paper Figs 11/17 constants)
+  serving       -- event-driven cluster simulator + metrics (Eq. 8)
+"""
+
+from repro.core.landmarks import (
+    LandmarkIndex,
+    bfs_distances,
+    build_landmark_index,
+    select_landmarks,
+    UNREACHED,
+)
+from repro.core.embedding import EmbedConfig, GraphEmbedding, build_graph_embedding
+from repro.core.router import Router, RouterConfig, RouterState
+from repro.core.cache import CacheState, make_cache, cache_lookup, cache_insert, hit_rate
+from repro.core.storage import StorageTier, build_storage, multi_read_ref, sharded_multi_read
+from repro.core.query_engine import (
+    EngineConfig,
+    run_neighbor_aggregation,
+    run_random_walk,
+    run_reachability,
+)
+from repro.core.dispatch import capacity_dispatch, DispatchResult
+from repro.core.workloads import (
+    Workload,
+    hotspot_workload,
+    concentrated_workload,
+    uniform_workload,
+)
+from repro.core.costmodel import CostModel, INFINIBAND, ETHERNET
+from repro.core.serving import (
+    BallCache,
+    ServingSimulator,
+    SimResult,
+    SimRouter,
+    SimRouterConfig,
+    run_coupled_baseline,
+)
+
+__all__ = [
+    "LandmarkIndex",
+    "bfs_distances",
+    "build_landmark_index",
+    "select_landmarks",
+    "UNREACHED",
+    "EmbedConfig",
+    "GraphEmbedding",
+    "build_graph_embedding",
+    "Router",
+    "RouterConfig",
+    "RouterState",
+    "CacheState",
+    "make_cache",
+    "cache_lookup",
+    "cache_insert",
+    "hit_rate",
+    "StorageTier",
+    "build_storage",
+    "multi_read_ref",
+    "sharded_multi_read",
+    "EngineConfig",
+    "run_neighbor_aggregation",
+    "run_random_walk",
+    "run_reachability",
+    "capacity_dispatch",
+    "DispatchResult",
+    "Workload",
+    "hotspot_workload",
+    "concentrated_workload",
+    "uniform_workload",
+    "CostModel",
+    "INFINIBAND",
+    "ETHERNET",
+    "BallCache",
+    "ServingSimulator",
+    "SimResult",
+    "SimRouter",
+    "SimRouterConfig",
+    "run_coupled_baseline",
+]

@@ -1,0 +1,109 @@
+"""Capacity-aware top-k dispatch -- shared by gRouting and MoE.
+
+The router's argmin-with-load-balance over processors is structurally the
+same operation as MoE token->expert dispatch (DESIGN.md §2): items have a
+score per destination, destinations have finite capacity, and overflow must
+be re-routed (query stealing) or dropped (MoE). This module implements the
+shared primitive used by:
+
+  - repro.core.serving: query batches -> processors (overflow = steal to
+    next-best processor, never dropped);
+  - repro.models.moe:   tokens -> experts (overflow = dropped per standard
+    capacity-factor semantics).
+
+Implementation: iterative best-choice passes. Pass r assigns every
+still-unassigned item to its best remaining destination; items whose arrival
+rank within the destination exceeds remaining capacity stay unassigned and
+see that destination masked out in later passes. `n_rounds` passes guarantee
+assignment if total capacity >= items (stealing semantics).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DispatchResult(NamedTuple):
+    assignment: jax.Array  # (T,) int32 destination, -1 if dropped
+    position: jax.Array  # (T,) int32 slot within destination, -1 if dropped
+    counts: jax.Array  # (P,) int32 items per destination
+
+
+def _rank_within(dest: jax.Array, P: int) -> jax.Array:
+    """Arrival rank of each item within its destination (stable order)."""
+    T = dest.shape[0]
+    order = jnp.argsort(dest, stable=True)
+    sorted_dest = dest[order]
+    first = jnp.searchsorted(sorted_dest, sorted_dest, side="left")
+    pos_sorted = jnp.arange(T) - first
+    return jnp.zeros((T,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "n_rounds"))
+def capacity_dispatch(
+    scores: jax.Array, capacity: int, n_rounds: int = 2
+) -> DispatchResult:
+    """Assign each item to the lowest-score destination with free capacity.
+
+    scores: (T, P) float32, lower = better (distances). Rows of +inf are
+    never assigned. Returns assignment/position/counts; items that fail all
+    `n_rounds` passes get -1 (caller decides drop vs fallback).
+    """
+    T, P = scores.shape
+    assignment = jnp.full((T,), -1, jnp.int32)
+    position = jnp.full((T,), -1, jnp.int32)
+    used = jnp.zeros((P,), jnp.int32)
+    masked = scores
+
+    for _ in range(n_rounds):
+        unassigned = assignment < 0
+        choice = jnp.argmin(masked, axis=1).astype(jnp.int32)  # (T,)
+        cand = jnp.where(unassigned, choice, P)  # sentinel P = "no request"
+        rank = _rank_within(cand, P + 1)
+        free = capacity - used  # (P,)
+        cand_safe = jnp.minimum(cand, P - 1)
+        ok = unassigned & (rank < free[cand_safe]) & (cand < P)
+        assignment = jnp.where(ok, cand, assignment)
+        position = jnp.where(ok, used[cand_safe] + rank, position)
+        used = used + jnp.bincount(
+            jnp.where(ok, cand, P), length=P + 1
+        )[:P].astype(jnp.int32)
+        # mask chosen-but-full destination for the next round
+        masked = jnp.where(
+            (unassigned & ~ok)[:, None]
+            & (jnp.arange(P)[None, :] == cand_safe[:, None]),
+            jnp.inf,
+            masked,
+        )
+
+    counts = jnp.bincount(
+        jnp.where(assignment >= 0, assignment, P), length=P + 1
+    )[:P].astype(jnp.int32)
+    return DispatchResult(assignment=assignment, position=position, counts=counts)
+
+
+def gather_by_dispatch(
+    x: jax.Array, d: DispatchResult, P: int, capacity: int
+) -> jax.Array:
+    """Scatter items (T, ...) into a (P, capacity, ...) buffer by assignment."""
+    ok = d.assignment >= 0
+    dest = jnp.where(ok, d.assignment, P)
+    pos = jnp.where(ok, d.position, 0)
+    buf = jnp.zeros((P, capacity) + x.shape[1:], x.dtype)
+    return buf.at[dest, pos].set(x, mode="drop")
+
+
+def scatter_back(
+    buf: jax.Array, d: DispatchResult, T: int
+) -> jax.Array:
+    """Inverse of gather_by_dispatch: (P, capacity, ...) -> (T, ...); dropped
+    items get zeros."""
+    ok = d.assignment >= 0
+    dest = jnp.where(ok, d.assignment, 0)
+    pos = jnp.where(ok, d.position, 0)
+    out = buf[dest, pos]
+    return jnp.where(ok.reshape((T,) + (1,) * (out.ndim - 1)), out, 0)

@@ -1,0 +1,185 @@
+"""Graph embedding into R^D preserving hop-count distances (paper Algorithm 3).
+
+The paper minimizes the *relative* distance error (Eq. 4)
+
+    f_error(v1, v2) = |d(v1,v2) - ||x1 - x2||| / d(v1,v2)
+
+first over all landmark pairs, then per non-landmark node against all
+landmarks, using Simplex Downhill. Simplex Downhill is inherently sequential
+and scalar; the TPU-native equivalent used here is Adam on the *identical*
+objective (smoothed: squared relative error), which the paper itself notes is
+"completely parallelizable per node". We vmap the per-node optimization over
+all nodes at once.
+
+Outputs coordinates (n, D) float32 -- the O(nD) router state (Requirement 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.landmarks import UNREACHED
+
+
+@dataclasses.dataclass
+class EmbedConfig:
+    dim: int = 10
+    lm_steps: int = 500
+    node_steps: int = 200
+    lr: float = 0.05
+    eps: float = 1e-6
+    seed: int = 0
+
+
+def _adam_update(p, g, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1**t)
+    vh = v / (1 - b2**t)
+    return p - lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+
+def _rel_err_loss(pred_d: jax.Array, true_d: jax.Array, eps: float) -> jax.Array:
+    """Mean squared relative error over valid (reachable, non-self) pairs."""
+    valid = (true_d > 0) & (true_d < UNREACHED)
+    td = jnp.where(valid, true_d, 1).astype(jnp.float32)
+    err = (pred_d - td) / jnp.maximum(td, eps)
+    return jnp.sum(jnp.where(valid, err * err, 0.0)) / jnp.maximum(jnp.sum(valid), 1)
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "dim"))
+def embed_landmarks(
+    lm_dists: jax.Array, dim: int, steps: int, lr: float, key: jax.Array
+) -> jax.Array:
+    """Embed landmarks: minimize pairwise relative error (Algorithm 3 line 5).
+
+    lm_dists: (L, L) int32 hop distances between landmarks.
+    Returns (L, dim) float32 coordinates.
+    """
+    L = lm_dists.shape[0]
+    # init: random small ball scaled by mean distance
+    valid = (lm_dists > 0) & (lm_dists < UNREACHED)
+    scale = jnp.sum(jnp.where(valid, lm_dists, 0)) / jnp.maximum(jnp.sum(valid), 1)
+    x0 = jax.random.normal(key, (L, dim)) * scale / jnp.sqrt(2.0 * dim)
+
+    def loss_fn(x):
+        diff = x[:, None, :] - x[None, :, :]
+        pred = jnp.sqrt(jnp.sum(diff * diff, -1) + 1e-12)
+        return _rel_err_loss(pred, lm_dists, 1e-6)
+
+    def step(carry, t):
+        x, m, v = carry
+        g = jax.grad(loss_fn)(x)
+        x, m, v = _adam_update(x, g, m, v, t + 1.0, lr)
+        return (x, m, v), None
+
+    (x, _, _), _ = jax.lax.scan(step, (x0, jnp.zeros_like(x0), jnp.zeros_like(x0)),
+                                jnp.arange(steps, dtype=jnp.float32))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def embed_nodes(
+    node_lm_dists: jax.Array, lm_coords: jax.Array, steps: int, lr: float, key: jax.Array
+) -> jax.Array:
+    """Embed every node against the fixed landmark coordinates
+    (Algorithm 3 lines 6-8) -- parallel over nodes.
+
+    node_lm_dists: (n, L) int32; lm_coords: (L, dim).
+    Returns (n, dim) float32.
+    """
+    n, L = node_lm_dists.shape
+    dim = lm_coords.shape[1]
+
+    # init each node at the weighted centroid of its nearest landmarks
+    d = node_lm_dists.astype(jnp.float32)
+    valid = (node_lm_dists < UNREACHED)
+    w = jnp.where(valid, 1.0 / (1.0 + d), 0.0)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    x0 = w @ lm_coords + 0.01 * jax.random.normal(key, (n, dim))
+
+    def loss_fn(x):  # x: (n, dim)
+        diff = x[:, None, :] - lm_coords[None, :, :]  # (n, L, dim)
+        pred = jnp.sqrt(jnp.sum(diff * diff, -1) + 1e-12)
+        return _rel_err_loss(pred, node_lm_dists, 1e-6)
+
+    def step(carry, t):
+        x, m, v = carry
+        g = jax.grad(loss_fn)(x)
+        x, m, v = _adam_update(x, g, m, v, t + 1.0, lr)
+        return (x, m, v), None
+
+    (x, _, _), _ = jax.lax.scan(step, (x0, jnp.zeros_like(x0), jnp.zeros_like(x0)),
+                                jnp.arange(steps, dtype=jnp.float32))
+    return x
+
+
+@dataclasses.dataclass
+class GraphEmbedding:
+    """coords: (n, D) float32; landmarks + their coords retained for
+    incremental updates (paper §3.4.2)."""
+
+    coords: np.ndarray
+    landmarks: np.ndarray
+    lm_coords: np.ndarray
+    config: EmbedConfig
+
+    def rel_error(self, dist_to_lm: np.ndarray, sample: int = 4096, seed: int = 0) -> float:
+        """Mean relative distance error node->landmark on a sample (Fig 14a)."""
+        rng = np.random.default_rng(seed)
+        n = self.coords.shape[0]
+        idx = rng.integers(0, n, size=min(sample, n))
+        d_true = dist_to_lm[idx].astype(np.float64)  # (s, L)
+        diff = self.coords[idx][:, None, :] - self.lm_coords[None, :, :]
+        d_pred = np.sqrt((diff * diff).sum(-1))
+        valid = (d_true > 0) & (d_true < float(UNREACHED))
+        rel = np.abs(d_pred - d_true) / np.maximum(d_true, 1e-9)
+        return float(rel[valid].mean())
+
+
+def build_graph_embedding(
+    dist_to_lm: np.ndarray,
+    landmarks: np.ndarray,
+    config: EmbedConfig = EmbedConfig(),
+) -> GraphEmbedding:
+    """Full Algorithm 3: landmark BFS distances are an input (shared with
+    landmark routing preprocessing -- one BFS pass serves both schemes)."""
+    key = jax.random.PRNGKey(config.seed)
+    k1, k2 = jax.random.split(key)
+    lm_dists = dist_to_lm[landmarks, :]  # (L, L)
+    lm_coords = embed_landmarks(
+        jnp.asarray(lm_dists), config.dim, config.lm_steps, config.lr, k1
+    )
+    coords = embed_nodes(
+        jnp.asarray(dist_to_lm), lm_coords, config.node_steps, config.lr, k2
+    )
+    coords = np.array(coords)  # writable host copy
+    # landmarks keep their directly-optimized coordinates
+    coords[np.asarray(landmarks)] = np.asarray(lm_coords)
+    return GraphEmbedding(
+        coords=coords,
+        landmarks=np.asarray(landmarks),
+        lm_coords=np.asarray(lm_coords),
+        config=config,
+    )
+
+
+def incremental_embed_node(
+    emb: GraphEmbedding, d_to_landmarks: np.ndarray, steps: Optional[int] = None
+) -> np.ndarray:
+    """Embed ONE new node against existing landmark coords (graph update path)."""
+    steps = steps or emb.config.node_steps
+    x = embed_nodes(
+        jnp.asarray(d_to_landmarks[None, :].astype(np.int32)),
+        jnp.asarray(emb.lm_coords),
+        steps,
+        emb.config.lr,
+        jax.random.PRNGKey(1),
+    )
+    return np.asarray(x)[0]

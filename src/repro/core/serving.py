@@ -1,0 +1,351 @@
+"""Serving loop + event-driven throughput simulator.
+
+Two execution paths share the core logic (DESIGN.md §2):
+
+1. ``ServingSimulator`` -- the measurement harness for reproducing the
+   paper's figures. The container is CPU-only, so paper-scale wall-clock is
+   *derived*: queries are executed faithfully (BFS order, per-processor LRU
+   cache contents, storage round trips) and the service time of each query is
+   computed by the calibrated cost model (repro.core.costmodel). Routing,
+   queueing, and query stealing are simulated event-driven, exactly following
+   the paper's router design (per-connection queues, ack-driven dispatch,
+   steal-on-idle).
+
+2. ``make_distributed_serve_step`` (repro.serve.graph_serving) -- the real
+   pjit/shard_map path lowered in the multi-pod dry-run, using the JAX
+   set-associative cache + sharded_multi_read.
+
+The simulator's per-processor cache is a plain LRU (OrderedDict), i.e. the
+paper's exact eviction policy; the device path's set-associative LRU is
+validated against it in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import CostModel, INFINIBAND
+from repro.core.landmarks import LandmarkIndex, UNREACHED
+from repro.core.embedding import GraphEmbedding
+from repro.core.workloads import Workload
+from repro.graph.csr import CSRGraph
+
+
+# ---------------------------------------------------------------------------
+# h-hop ball precomputation (the "ground truth" each query must touch)
+# ---------------------------------------------------------------------------
+
+
+def hhop_ball(g: CSRGraph, q: int, h: int) -> Tuple[np.ndarray, int]:
+    """BFS from q. Returns (touched = nodes whose adjacency is read, in BFS
+    level order == multi_read order; result_size = |N_h(q)| incl. q).
+
+    Algorithm 5 reads the adjacency of every node at depth 0..h-1.
+    """
+    visited = {q}
+    frontier = [q]
+    touched: List[int] = []
+    for _ in range(h):
+        touched.extend(frontier)
+        nxt: List[int] = []
+        for u in frontier:
+            for v in g.neighbors(u):
+                v = int(v)
+                if v not in visited:
+                    visited.add(v)
+                    nxt.append(v)
+        frontier = nxt
+        if not frontier:
+            break
+    return np.array(touched, dtype=np.int64), len(visited)
+
+
+class BallCache:
+    """Memoizes h-hop balls per (query, h)."""
+
+    def __init__(self, g: CSRGraph):
+        self.g = g
+        self._memo: Dict[Tuple[int, int], Tuple[np.ndarray, int]] = {}
+
+    def get(self, q: int, h: int) -> Tuple[np.ndarray, int]:
+        key = (q, h)
+        if key not in self._memo:
+            self._memo[key] = hhop_ball(self.g, q, h)
+        return self._memo[key]
+
+
+# ---------------------------------------------------------------------------
+# Host-side routing mirror (numpy): same math as repro.core.router, kept in
+# numpy so the event simulator can route queries one at a time cheaply.
+# Equivalence with the JAX Router is covered by tests/test_core_router.py.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SimRouterConfig:
+    scheme: str = "embed"
+    load_factor: float = 20.0
+    alpha: float = 0.5
+    steal_margin: float = 4.0
+
+
+class SimRouter:
+    def __init__(
+        self,
+        P: int,
+        cfg: SimRouterConfig,
+        landmark_index: Optional[LandmarkIndex] = None,
+        embedding: Optional[GraphEmbedding] = None,
+        seed: int = 0,
+    ):
+        self.P = P
+        self.cfg = cfg
+        self.scheme = cfg.scheme
+        rng = np.random.default_rng(seed)
+        self.dist_to_proc = None
+        self.coords = None
+        self.ema = None
+        if cfg.scheme == "landmark":
+            assert landmark_index is not None
+            d = landmark_index.dist_to_proc[:, :P].astype(np.float64)
+            self.dist_to_proc = np.where(d >= float(UNREACHED), 1e6, d)
+        elif cfg.scheme == "embed":
+            assert embedding is not None
+            self.coords = embedding.coords.astype(np.float64)
+            lo, hi = self.coords.min(0), self.coords.max(0)
+            self.ema = rng.uniform(0, 1, (P, self.coords.shape[1])) * (hi - lo) + lo
+        self.rr = 0
+
+    def route(self, q: int, load: np.ndarray) -> int:
+        cfg = self.cfg
+        if self.scheme == "next_ready" or self.scheme == "no_cache":
+            p = int(np.argmin(load))
+            self.rr += 1
+            return p
+        if self.scheme == "hash":
+            x = np.uint32(q)
+            x = np.uint32((int(x) ^ (int(x) >> 16)) * 0x7FEB352D & 0xFFFFFFFF)
+            x = np.uint32((int(x) ^ (int(x) >> 15)) * 0x846CA68B & 0xFFFFFFFF)
+            p0 = int((int(x) ^ (int(x) >> 16)) % self.P)
+            idle = int(np.argmin(load))
+            return idle if load[p0] - load[idle] > cfg.steal_margin else p0
+        if self.scheme == "landmark":
+            score = self.dist_to_proc[q] + load / cfg.load_factor
+            return int(np.argmin(score))
+        if self.scheme == "embed":
+            x = self.coords[q]
+            d1 = np.sqrt(((self.ema - x[None, :]) ** 2).sum(-1) + 1e-12)
+            p = int(np.argmin(d1 + load / cfg.load_factor))
+            a = cfg.alpha
+            self.ema[p] = a * self.ema[p] + (1 - a) * x  # Eq. 5
+            return p
+        raise ValueError(self.scheme)
+
+
+# ---------------------------------------------------------------------------
+# Event-driven serving simulator
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SimResult:
+    scheme: str
+    n_queries: int
+    throughput_qps: float
+    mean_response_ms: float
+    p99_response_ms: float
+    cache_hits: int
+    cache_misses: int
+    hit_rate: float
+    per_proc_queries: np.ndarray
+    makespan_s: float
+    stolen: int
+
+    def row(self) -> str:
+        return (
+            f"{self.scheme:>10s}  qps={self.throughput_qps:9.1f}  "
+            f"resp={self.mean_response_ms:7.2f}ms  hit={self.hit_rate:6.3f}  "
+            f"stolen={self.stolen}"
+        )
+
+
+class LRUCache:
+    """The paper's per-processor LRU over adjacency rows (entries = rows)."""
+
+    __slots__ = ("capacity", "d")
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.d: OrderedDict = OrderedDict()
+
+    def access(self, key: int) -> bool:
+        """Returns hit?; inserts on miss (evicting LRU)."""
+        if self.capacity <= 0:
+            return False
+        if key in self.d:
+            self.d.move_to_end(key)
+            return True
+        self.d[key] = True
+        if len(self.d) > self.capacity:
+            self.d.popitem(last=False)
+        return False
+
+
+class ServingSimulator:
+    """Decoupled gRouting cluster: 1 router, P processors, S storage shards."""
+
+    def __init__(
+        self,
+        g: CSRGraph,
+        n_processors: int,
+        router: SimRouter,
+        cache_entries: int = 1 << 16,
+        cost: CostModel = INFINIBAND,
+        h: int = 3,
+        use_cache: bool = True,
+        ball_cache: Optional[BallCache] = None,
+        steal: bool = True,
+    ):
+        self.g = g
+        self.P = n_processors
+        self.router = router
+        self.cost = cost
+        self.h = h
+        self.use_cache = use_cache
+        self.cache_entries = cache_entries
+        self.balls = ball_cache or BallCache(g)
+        self.steal = steal
+
+    def run(self, wl: Workload, h: Optional[int] = None) -> SimResult:
+        h = h or self.h
+        P = self.P
+        caches = [LRUCache(self.cache_entries if self.use_cache else 0) for _ in range(P)]
+        queues: List[List[int]] = [[] for _ in range(P)]  # pending query indices
+        load = np.zeros(P, dtype=np.float64)
+
+        # --- dispatch phase: router assigns the burst (ack-driven queues) ---
+        assign = np.zeros(wl.query_nodes.size, dtype=np.int32)
+        for i, q in enumerate(wl.query_nodes):
+            p = self.router.route(int(q), load)
+            assign[i] = p
+            queues[p].append(i)
+            load[p] += 1.0
+
+        # --- execution phase: event-driven with steal-on-idle ---------------
+        #    (time, proc) processor-free events
+        events = [(0.0, p) for p in range(P)]
+        heapq.heapify(events)
+        resp = np.zeros(wl.query_nodes.size)
+        hits = 0
+        misses = 0
+        stolen = 0
+        done = 0
+        makespan = 0.0
+        per_proc = np.zeros(P, dtype=np.int64)
+        while done < wl.query_nodes.size:
+            t, p = heapq.heappop(events)
+            if not queues[p]:
+                if not self.steal:
+                    continue
+                # steal from the longest queue (tail = farthest-future query)
+                victim = int(np.argmax([len(qq) for qq in queues]))
+                if not queues[victim]:
+                    continue
+                i = queues[victim].pop()
+                load[victim] -= 1.0
+                load[p] += 1.0
+                stolen += 1
+            else:
+                i = queues[p].pop(0)
+            q = int(wl.query_nodes[i])
+            touched, _result = self.balls.get(q, h)
+            q_hits = 0
+            if self.use_cache:
+                c = caches[p]
+                for u in touched:
+                    if c.access(int(u)):
+                        q_hits += 1
+            q_miss = touched.size - q_hits
+            rounds = h  # one batched multi_read per hop
+            if self.use_cache:
+                st = self.cost.service_time_s(touched.size, q_miss, rounds)
+            else:
+                st = self.cost.no_cache_time_s(touched.size, rounds)
+            hits += q_hits
+            misses += q_miss
+            resp[i] = st
+            per_proc[p] += 1
+            load[p] -= 1.0
+            t_done = t + st
+            makespan = max(makespan, t_done)
+            heapq.heappush(events, (t_done, p))
+            done += 1
+
+        total = hits + misses
+        return SimResult(
+            scheme=self.router.scheme if self.use_cache else "no_cache",
+            n_queries=int(wl.query_nodes.size),
+            throughput_qps=wl.query_nodes.size / max(makespan, 1e-12),
+            mean_response_ms=float(resp.mean() * 1e3),
+            p99_response_ms=float(np.percentile(resp, 99) * 1e3),
+            cache_hits=int(hits),
+            cache_misses=int(misses),
+            hit_rate=float(hits / total) if total else 0.0,
+            per_proc_queries=per_proc,
+            makespan_s=float(makespan),
+            stolen=stolen,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Coupled-baseline simulator (SEDGE/Giraph & PowerGraph stand-in, Fig. 8)
+# ---------------------------------------------------------------------------
+
+
+def run_coupled_baseline(
+    g: CSRGraph,
+    wl: Workload,
+    labels: np.ndarray,
+    n_workers: int,
+    h: int = 3,
+    ball_cache: Optional[BallCache] = None,
+    t_superstep_ms: float = 18.0,
+) -> SimResult:
+    """Partition-coupled BSP execution: the owner of the query node runs the
+    query; every hop is a superstep; neighbors on other partitions cost
+    remote accesses. Cache-less (vertex-centric engines recompute)."""
+    from repro.core.costmodel import CoupledSystemModel
+
+    cm = CoupledSystemModel(t_superstep_ms=t_superstep_ms)
+    balls = ball_cache or BallCache(g)
+    busy = np.zeros(n_workers)
+    resp = np.zeros(wl.query_nodes.size)
+    for i, q in enumerate(wl.query_nodes):
+        w = int(labels[int(q)]) % n_workers
+        touched, _ = balls.get(int(q), h)
+        if touched.size:
+            cut = float(np.mean(labels[touched] % n_workers != w))
+        else:
+            cut = 0.0
+        st = cm.service_time_s(touched.size, h, cut)
+        resp[i] = st
+        busy[w] += st
+    makespan = float(busy.max())
+    return SimResult(
+        scheme="coupled",
+        n_queries=int(wl.query_nodes.size),
+        throughput_qps=wl.query_nodes.size / max(makespan, 1e-12),
+        mean_response_ms=float(resp.mean() * 1e3),
+        p99_response_ms=float(np.percentile(resp, 99) * 1e3),
+        cache_hits=0,
+        cache_misses=int(sum(balls.get(int(q), h)[0].size for q in wl.query_nodes)),
+        hit_rate=0.0,
+        per_proc_queries=np.bincount(labels[wl.query_nodes] % n_workers, minlength=n_workers),
+        makespan_s=makespan,
+        stolen=0,
+    )

@@ -1,0 +1,104 @@
+"""Online query workload generators (paper §4.2, Figure 7).
+
+Three categories, each a stream of query nodes (+ a uniform mixture of the
+three query types):
+
+  - r-hop hotspot:    100 hotspot centers uniform at random; 10 query nodes
+                      within r hops of each center; queries from the same
+                      hotspot are consecutive. (r = 1, 2 in the paper)
+  - concentrated:     r = 0 -- each center queried 10 times consecutively.
+  - uniform:          1000 uniform query nodes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+QUERY_TYPES = ("aggregation", "random_walk", "reachability")
+
+
+@dataclasses.dataclass
+class Workload:
+    name: str
+    query_nodes: np.ndarray  # (Q,) int32
+    query_types: np.ndarray  # (Q,) int8 index into QUERY_TYPES
+    targets: np.ndarray  # (Q,) int32 -- second endpoint for reachability, else -1
+    hotspot_id: np.ndarray  # (Q,) int32 -- which hotspot (-1 for uniform)
+
+
+def _ball_sample(g: CSRGraph, center: int, r: int, k: int, rng) -> np.ndarray:
+    """Sample k nodes within r hops of center (BFS ball, then choice)."""
+    ball = {center}
+    frontier = [center]
+    for _ in range(r):
+        nxt = []
+        for u in frontier:
+            for v in g.neighbors(u):
+                if v not in ball:
+                    ball.add(int(v))
+                    nxt.append(int(v))
+            if len(ball) > 50 * k:
+                break
+        frontier = nxt
+        if not frontier:
+            break
+    arr = np.fromiter(ball, dtype=np.int64)
+    return rng.choice(arr, size=k, replace=arr.size < k)
+
+
+def _mix_types(q: int, rng, reach_targets: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    types = rng.integers(0, len(QUERY_TYPES), size=q).astype(np.int8)
+    targets = np.where(types == 2, reach_targets, -1).astype(np.int32)
+    return types, targets
+
+
+def hotspot_workload(
+    g: CSRGraph,
+    r: int = 2,
+    n_hotspots: int = 100,
+    queries_per_hotspot: int = 10,
+    seed: int = 0,
+) -> Workload:
+    rng = np.random.default_rng(seed)
+    centers = rng.integers(0, g.n, size=n_hotspots)
+    nodes: List[np.ndarray] = []
+    hs: List[np.ndarray] = []
+    for i, c in enumerate(centers):
+        qs = (
+            np.full(queries_per_hotspot, c, dtype=np.int64)
+            if r == 0
+            else _ball_sample(g, int(c), r, queries_per_hotspot, rng)
+        )
+        nodes.append(qs)
+        hs.append(np.full(queries_per_hotspot, i, dtype=np.int32))
+    qn = np.concatenate(nodes).astype(np.int32)
+    types, targets = _mix_types(qn.size, rng, rng.integers(0, g.n, qn.size).astype(np.int32))
+    return Workload(
+        name=f"{r}-hop-hotspot" if r > 0 else "concentrated",
+        query_nodes=qn,
+        query_types=types,
+        targets=targets,
+        hotspot_id=np.concatenate(hs),
+    )
+
+
+def concentrated_workload(g: CSRGraph, n_hotspots: int = 100, reps: int = 10, seed: int = 0):
+    return hotspot_workload(g, r=0, n_hotspots=n_hotspots, queries_per_hotspot=reps, seed=seed)
+
+
+def uniform_workload(g: CSRGraph, n_queries: int = 1000, seed: int = 0) -> Workload:
+    rng = np.random.default_rng(seed)
+    qn = rng.integers(0, g.n, size=n_queries).astype(np.int32)
+    types, targets = _mix_types(qn.size, rng, rng.integers(0, g.n, qn.size).astype(np.int32))
+    return Workload(
+        name="uniform",
+        query_nodes=qn,
+        query_types=types,
+        targets=targets,
+        hotspot_id=np.full(qn.size, -1, np.int32),
+    )

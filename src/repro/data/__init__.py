@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipelines (replayable after restart)."""
+
+from repro.data.tokens import token_batch
+from repro.data.graphs import gnn_batch
+from repro.data.recsys import din_batch

@@ -1,0 +1,24 @@
+"""Synthetic LM token stream.
+
+Deterministic in (step, seed): after a restart the trainer replays the same
+batch for the same step (fault-tolerance requirement -- no data-loader
+state to checkpoint). Tokens follow a Zipf-ish distribution with local
+n-gram structure so the loss actually decreases during e2e runs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def token_batch(step: int, batch: int, seq: int, vocab: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    # zipf-ish marginal
+    base = rng.zipf(1.3, size=(batch, seq + 1)).astype(np.int64)
+    toks = (base - 1) % vocab
+    # inject simple bigram structure: even positions predict odd positions
+    toks[:, 1::2] = (toks[:, 0:-1:2] * 31 + 7) % vocab
+    return {
+        "tokens": toks[:, :-1].astype(np.int32),
+        "labels": toks[:, 1:].astype(np.int32),
+    }

@@ -1,0 +1,11 @@
+"""Distribution substrate: logical-axis sharding rules, collective helpers,
+fault-tolerance utilities."""
+
+from repro.distributed.mesh_utils import (
+    LogicalRules,
+    DEFAULT_RULES,
+    resolve_pspec,
+    shard_constraint,
+    set_mesh_rules,
+    current_rules,
+)

@@ -1,0 +1,157 @@
+"""Logical-axis sharding rules (MaxText-style) + helpers.
+
+Tensors are annotated with *logical* axis names; a rules table maps logical
+names to mesh axes. Resolution enforces divisibility: if a dimension is not
+divisible by the mapped mesh-axis size, the mapping falls back to replication
+for that dimension (recorded, so the roofline/perf pass can see what failed
+to shard -- e.g. qwen2.5's 40 q-heads on a 16-way model axis).
+
+Rules used by the assigned archs (see DESIGN.md §5):
+
+  batch   -> ("pod", "data")     data parallel (+ pod axis across pods)
+  fsdp    -> "data"              parameter/optimizer sharding (ZeRO-3-ish)
+  vocab   -> "model"
+  embed   -> None                activations replicated on the model axis
+  heads   -> "model"             tensor parallel attention
+  kv_heads-> "model"
+  mlp     -> "model"             tensor parallel FFN
+  experts -> "model"             expert parallel
+  seq     -> None                (context parallelism off in baseline)
+  nodes   -> ("data", "model")   GNN full-graph row sharding
+  edges   -> ("data", "model")
+  storage -> "model"             gRouting storage shards / recsys vocab rows
+  proc    -> "data"              gRouting query processors
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+DEFAULT_RULES: Dict[str, AxisName] = {
+    "batch": ("pod", "data"),
+    "fsdp": "data",
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_capacity": None,
+    "seq": None,
+    "kv_seq": None,
+    "nodes": ("data", "model"),
+    "edges": ("data", "model"),
+    "feat": None,
+    "storage": "model",
+    "proc": "data",
+    "stack": None,  # scanned layer axis
+}
+
+
+@dataclasses.dataclass
+class LogicalRules:
+    mesh: Mesh
+    rules: Dict[str, AxisName]
+
+    def mesh_axis_size(self, name: AxisName) -> int:
+        if name is None:
+            return 1
+        if isinstance(name, str):
+            return self.mesh.shape[name] if name in self.mesh.shape else 1
+        size = 1
+        for a in name:
+            size *= self.mesh.shape[a] if a in self.mesh.shape else 1
+        return size
+
+    def _exists(self, name: AxisName) -> AxisName:
+        """Drop mesh axes that don't exist in this mesh (e.g. 'pod' single-pod)."""
+        if name is None:
+            return None
+        if isinstance(name, str):
+            return name if name in self.mesh.shape else None
+        kept = tuple(a for a in name if a in self.mesh.shape)
+        return kept if kept else None
+
+
+_local = threading.local()
+
+
+@contextlib.contextmanager
+def set_mesh_rules(mesh: Mesh, rules: Optional[Dict[str, AxisName]] = None):
+    prev = getattr(_local, "rules", None)
+    _local.rules = LogicalRules(mesh, dict(rules or DEFAULT_RULES))
+    try:
+        yield _local.rules
+    finally:
+        _local.rules = prev
+
+
+def current_rules() -> Optional[LogicalRules]:
+    return getattr(_local, "rules", None)
+
+
+def resolve_pspec(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    lr: Optional[LogicalRules] = None,
+) -> P:
+    """Logical axes + concrete shape -> PartitionSpec with divisibility fallback."""
+    lr = lr or current_rules()
+    if lr is None:
+        return P()
+    parts = []
+    used: set = set()
+    for dim, name in zip(shape, logical_axes):
+        if name is None:
+            parts.append(None)
+            continue
+        mapped = lr._exists(lr.rules.get(name))
+        if mapped is None:
+            parts.append(None)
+            continue
+        # a mesh axis may appear only once in a PartitionSpec
+        if isinstance(mapped, str):
+            mapped_t: Tuple[str, ...] = (mapped,)
+        else:
+            mapped_t = mapped
+        mapped_t = tuple(a for a in mapped_t if a not in used)
+        if not mapped_t:
+            parts.append(None)
+            continue
+        size = 1
+        for a in mapped_t:
+            size *= lr.mesh.shape[a]
+        if dim % size != 0:
+            # divisibility fallback: try progressively shorter prefixes
+            ok = None
+            for k in range(len(mapped_t) - 1, 0, -1):
+                s = int(np.prod([lr.mesh.shape[a] for a in mapped_t[:k]]))
+                if dim % s == 0:
+                    ok = mapped_t[:k]
+                    break
+            if ok is None:
+                parts.append(None)
+                continue
+            mapped_t = ok
+        used.update(mapped_t)
+        parts.append(mapped_t if len(mapped_t) > 1 else mapped_t[0])
+    return P(*parts)
+
+
+def shard_constraint(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without rules/mesh."""
+    lr = current_rules()
+    if lr is None:
+        return x
+    spec = resolve_pspec(logical_axes, x.shape, lr)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(lr.mesh, spec))

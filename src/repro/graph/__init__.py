@@ -1,0 +1,32 @@
+"""Graph substrate: CSR structures, generators, partitioners, samplers."""
+
+from repro.graph.csr import CSRGraph, PaddedAdjacency, build_csr, to_padded, make_bidirected
+from repro.graph.generators import (
+    powerlaw_graph,
+    grid_graph,
+    erdos_renyi_graph,
+    cora_like_graph,
+    icosahedral_multimesh,
+    molecule_batch_graph,
+)
+from repro.graph.partition import hash_partition, label_propagation_partition, edge_cut
+from repro.graph.sampler import NeighborSampler, SampledSubgraph
+
+__all__ = [
+    "CSRGraph",
+    "PaddedAdjacency",
+    "build_csr",
+    "to_padded",
+    "make_bidirected",
+    "powerlaw_graph",
+    "grid_graph",
+    "erdos_renyi_graph",
+    "cora_like_graph",
+    "icosahedral_multimesh",
+    "molecule_batch_graph",
+    "hash_partition",
+    "label_propagation_partition",
+    "edge_cut",
+    "NeighborSampler",
+    "SampledSubgraph",
+]

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot spots + jnp oracles.
+
+Kernels (each <name>.py has the pallas_call + BlockSpec; ops.py has the
+backend-dispatching wrappers; ref.py the pure-jnp oracles):
+
+  flash_attention -- GQA / causal / sliding-window / softcap attention
+  segment_reduce  -- sorted one-hot-MXU segment sum (GNN aggregation)
+  embedding_bag   -- fused gather + bag reduce (recsys, storage rows)
+  frontier        -- scatter-free BFS frontier expansion (gRouting hot loop)
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.segment_reduce import segment_sum as segment_sum_pallas
+from repro.kernels.embedding_bag import embedding_bag as embedding_bag_pallas
+from repro.kernels.frontier import frontier_expand as frontier_expand_pallas

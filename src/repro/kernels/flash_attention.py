@@ -1,0 +1,161 @@
+"""Flash attention Pallas TPU kernel (GQA, causal, sliding window, softcap).
+
+VMEM tiling: grid = (batch*q_heads, Sq/BQ, Skv/BK); the KV axis is the
+innermost (sequential on TPU), with running-max/sum/accumulator state in
+VMEM scratch (FlashAttention-2 style single-pass online softmax).
+
+Block shapes are MXU-aligned: BQ = BK = 128, head_dim padded to a multiple
+of 128 upstream (64 works too: the MXU tiles 128x128 but 64-lane ops run at
+half occupancy -- both assigned LM archs use D_head = 128).
+
+Masking variants needed by the assigned archs:
+  causal            -- all LM training/prefill
+  sliding window    -- gemma2 local layers (window = 4096)
+  logit softcap     -- gemma2 (cap = 50.0 on attention logits)
+GQA is handled by the index_map: q head h reads kv head h // group.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,  # (BQ, D)
+    k_ref,  # (BK, D)
+    v_ref,  # (BK, D)
+    o_ref,  # (BQ, D)
+    m_scr,  # (BQ,) f32 scratch: running max
+    l_scr,  # (BQ,) f32 scratch: running denom
+    acc_scr,  # (BQ, D) f32 scratch: running numerator
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    softcap: Optional[float],
+    bq: int,
+    bk: int,
+    n_kv_blocks: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (BQ, BK)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_cur[:, None])
+    # fully-masked rows: keep p exactly zero (exp(NEG_INF - m) underflows, ok)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_cur = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_cur
+    l_scr[...] = l_cur
+    acc_scr[...] = acc
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv, Skv, D)
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0, "GQA requires Hq % Hkv == 0"
+    group = Hq // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    scale_v = scale if scale is not None else 1.0 / (D**0.5)
+    n_kv_blocks = Skv // bk
+
+    qf = q.reshape(B * Hq, Sq, D)
+    kf = k.reshape(B * Hkv, Skv, D)
+    vf = v.reshape(B * Hkv, Skv, D)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale_v,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        bq=bq,
+        bk=bk,
+        n_kv_blocks=n_kv_blocks,
+    )
+
+    grid = (B * Hq, Sq // bq, n_kv_blocks)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, D), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((None, bk, D), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((None, bk, D), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, D), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        scratch_shapes=_scratch(bq, D),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, Sq, D)
+
+
+def _scratch(bq: int, d: int):
+    from jax.experimental import pallas as pl  # local import for tpu scratch
+    import jax.experimental.pallas.tpu as pltpu
+
+    return [
+        pltpu.VMEM((bq,), jnp.float32),
+        pltpu.VMEM((bq,), jnp.float32),
+        pltpu.VMEM((bq, d), jnp.float32),
+    ]

@@ -1,0 +1,160 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantic ground truth: each kernel's test sweeps shapes/dtypes
+and asserts allclose against these. They are also the lowering used on
+non-TPU backends (ops.py dispatches on backend), so the multi-pod dry-run on
+the CPU backend lowers these exact computations.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv, Skv, D)
+    v: jax.Array,  # (B, Hkv, Skv, D)
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding window size (None = global)
+    softcap: Optional[float] = None,  # gemma2 logit soft-capping
+    scale: Optional[float] = None,
+    q_offset: int = 0,  # absolute position of q[0] (for prefill chunks/decode)
+) -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kr).astype(jnp.float32) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), vr)
+    return out
+
+
+def attention_chunked_ref(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv, Skv, D)
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    chunk: int = 512,
+) -> jax.Array:
+    """Query-chunked attention: identical math to attention_ref but the
+    (Sq, Skv) logits are materialized one q-chunk at a time inside a
+    remat'ed lax.map, bounding peak memory to O(B*H*chunk*Skv).
+
+    This is the non-TPU lowering for long sequences (the Pallas flash kernel
+    owns the TPU path); the dry-run's memory_analysis therefore reflects a
+    flash-equivalent working set, not O(S^2).
+    """
+    B, Hq, Sq, D = q.shape
+    if Sq % chunk != 0:  # fall back for ragged tails (small anyway)
+        return attention_ref(q, k, v, causal, window, softcap, scale, q_offset)
+    n_chunks = Sq // chunk
+    qc = q.reshape(B, Hq, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+
+    @jax.checkpoint
+    def one_chunk(args):
+        qi, off = args
+        return attention_ref(
+            qi, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, q_offset=off,
+        )
+
+    offs = q_offset + jnp.arange(n_chunks) * chunk
+    out = jax.lax.map(one_chunk, (qc, offs))  # (n_chunks, B, Hq, chunk, D)
+    return out.transpose(1, 2, 0, 3, 4).reshape(B, Hq, Sq, D)
+
+
+# ---------------------------------------------------------------------------
+# segment reduce (GNN message aggregation)
+# ---------------------------------------------------------------------------
+
+
+def segment_sum_ref(values: jax.Array, seg_ids: jax.Array, num_segments: int) -> jax.Array:
+    """values: (E, D); seg_ids: (E,) int32 (may be -1 = dropped)."""
+    ok = seg_ids >= 0
+    vals = jnp.where(ok[:, None], values, 0)
+    ids = jnp.where(ok, seg_ids, 0)
+    return jax.ops.segment_sum(vals, ids, num_segments=num_segments)
+
+
+def segment_max_ref(values: jax.Array, seg_ids: jax.Array, num_segments: int) -> jax.Array:
+    neg = jnp.finfo(values.dtype).min if jnp.issubdtype(values.dtype, jnp.floating) else jnp.iinfo(values.dtype).min
+    ok = seg_ids >= 0
+    vals = jnp.where(ok[:, None], values, neg)
+    ids = jnp.where(ok, seg_ids, 0)
+    out = jax.ops.segment_max(vals, ids, num_segments=num_segments)
+    # empty segments -> 0 (not -inf), matching kernel semantics
+    has = jax.ops.segment_sum(ok.astype(jnp.int32), ids, num_segments=num_segments) > 0
+    return jnp.where(has[:, None], out, 0)
+
+
+def segment_mean_ref(values: jax.Array, seg_ids: jax.Array, num_segments: int) -> jax.Array:
+    s = segment_sum_ref(values, seg_ids, num_segments)
+    ok = (seg_ids >= 0).astype(values.dtype)
+    cnt = jax.ops.segment_sum(ok, jnp.where(seg_ids >= 0, seg_ids, 0), num_segments=num_segments)
+    return s / jnp.maximum(cnt, 1)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# embedding bag (recsys / storage-tier row fetch)
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag_ref(
+    table: jax.Array,  # (V, D)
+    indices: jax.Array,  # (B, L) int32, -1 = padding
+    weights: Optional[jax.Array] = None,  # (B, L)
+    combine: str = "sum",  # sum | mean
+) -> jax.Array:
+    ok = indices >= 0
+    safe = jnp.maximum(indices, 0)
+    rows = table[safe]  # (B, L, D)
+    w = jnp.ones(indices.shape, table.dtype) if weights is None else weights.astype(table.dtype)
+    w = jnp.where(ok, w, 0)
+    out = jnp.einsum("bl,bld->bd", w, rows)
+    if combine == "mean":
+        out = out / jnp.maximum(ok.sum(-1, keepdims=True), 1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# BFS frontier expansion (gRouting hot loop)
+# ---------------------------------------------------------------------------
+
+
+def frontier_expand_ref(
+    rows: jax.Array,  # (F, W) int32 adjacency rows of the frontier, -1 padded
+    deg: jax.Array,  # (F,) int32
+    visited: jax.Array,  # (n,) bool
+) -> jax.Array:
+    """Returns new visited bitmap ORed with all valid neighbors."""
+    F, W = rows.shape
+    ok = (rows >= 0) & (jnp.arange(W)[None, :] < deg[:, None])
+    flat = jnp.where(ok, rows, 0).reshape(-1)
+    return visited.at[flat].max(ok.reshape(-1))

@@ -1,0 +1,99 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs a REDUCED config end-to-end on the host devices (this container is
+CPU-only; the full configs are exercised by launch/dryrun.py). Demonstrates
+the production loop: deterministic data pipeline, checkpoint/restart,
+failure injection, non-finite-grad skipping.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def build_smoke_training(arch_name: str, batch: int, seq: int):
+    """Returns (loss_fn, init_params_fn, batch_fn) for a reduced config."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.models.param import init_params
+
+    arch = get_arch(arch_name)
+    cfg = arch.smoke_cfg()
+    key = jax.random.PRNGKey(0)
+
+    if arch.family == "lm":
+        from repro.data.tokens import token_batch
+        from repro.models import transformer as T
+
+        specs = T.lm_param_specs(cfg)
+        return (
+            lambda p, b: T.loss_fn(p, b, cfg),
+            lambda: init_params(specs, key),
+            lambda step: token_batch(step, batch, seq, cfg.vocab),
+        )
+    if arch.family == "recsys":
+        from repro.data.recsys import din_batch
+        from repro.models.recsys import din as M
+
+        specs = M.param_specs(cfg)
+        return (
+            lambda p, b: M.loss_fn(p, b, cfg),
+            lambda: init_params(specs, key),
+            lambda step: din_batch(
+                step, batch, seq_len=cfg.seq_len, n_items=cfg.n_items,
+                n_cats=cfg.n_cats, d_profile=cfg.d_profile,
+            ),
+        )
+    if arch.family == "gnn":
+        from repro.data.graphs import full_graph_batch
+        from repro.graph.generators import cora_like_graph
+        import importlib
+
+        mod = importlib.import_module(f"repro.models.gnn.{arch_name.replace('-', '_')}"
+                                      .replace("equiformer_v2", "equiformer_v2"))
+        g, feats, labels = cora_like_graph(n=400, e_target=1600, d_feat=cfg.d_in,
+                                           n_classes=cfg.n_out)
+        b = full_graph_batch(g, feats, labels)
+        specs = mod.param_specs(cfg)
+        return (
+            lambda p, bb: mod.loss_fn(p, bb, cfg),
+            lambda: init_params(specs, key),
+            lambda step: b,
+        )
+    raise ValueError(f"no training path for family {arch.family}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    args = ap.parse_args()
+
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    loss_fn, init_fn, batch_fn = build_smoke_training(args.arch, args.batch, args.seq)
+    trainer = Trainer(
+        loss_fn,
+        init_fn,
+        batch_fn,
+        TrainerConfig(
+            total_steps=args.steps,
+            ckpt_every=args.ckpt_every,
+            ckpt_dir=args.ckpt_dir,
+            log_every=max(1, args.steps // 10),
+        ),
+    )
+    state = trainer.run()
+    print(f"[train] finished at step {int(state.step)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,11 @@
+"""Model zoo: LM transformers (dense + MoE), GNNs, recsys."""
+
+from repro.models.param import (
+    ParamSpec,
+    init_params,
+    abstract_params,
+    param_pspecs,
+    param_count,
+    param_bytes,
+)
+from repro.models.transformer import LMConfig, lm_param_specs, forward, loss_fn, serve_step

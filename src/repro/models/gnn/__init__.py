@@ -1,0 +1,15 @@
+"""GNN architectures: EGNN, PNA, EquiformerV2 (eSCN), GraphCast.
+
+All share the edge-index message-passing substrate (message_passing.py)
+built on jax.ops.segment_* / the Pallas segment_sum kernel, per the
+assignment: "implement message-passing via segment_sum over an edge-index
+-> node scatter; this IS part of the system."
+
+Batch format (static shapes; -1 padded edges):
+  node_feat (N, F) f32 | node_pos (N, 3) f32 | src,dst (E,) i32
+  labels (N,) i32 or graph targets | graph_id (N,) i32 (batched molecules)
+  seed_mask (N,) bool (minibatch: loss on seeds only)
+"""
+
+from repro.models.gnn.message_passing import aggregate, segment_softmax, degree
+from repro.models.gnn import egnn, pna, equiformer_v2, graphcast

@@ -1,0 +1,102 @@
+"""EGNN: E(n)-equivariant GNN [arXiv:2102.09844]. n_layers=4, d_hidden=64.
+
+Per layer (Eqs. 3-6 of the paper):
+  m_ij  = phi_e(h_i, h_j, ||x_i - x_j||^2)
+  x_i'  = x_i + (1/deg_i) sum_j (x_i - x_j) * phi_x(m_ij)
+  h_i'  = phi_h(h_i, sum_j m_ij)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamSpec
+from repro.models import layers as L
+from repro.models.gnn.message_passing import aggregate, degree
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_in: int = 16
+    n_out: int = 1  # regression targets (molecule) or classes (node tasks)
+    task: str = "graph_regression"  # graph_regression | node_classification
+    n_graphs: int = 1  # batched molecules
+
+
+def _mlp_spec(d_in, d_hidden, d_out, name_dtype=jnp.float32):
+    return {
+        "w1": ParamSpec((d_in, d_hidden), ("embed", "mlp"), dtype=name_dtype),
+        "b1": ParamSpec((d_hidden,), ("mlp",), init="zeros", dtype=name_dtype),
+        "w2": ParamSpec((d_hidden, d_out), ("mlp", "embed"), dtype=name_dtype),
+        "b2": ParamSpec((d_out,), ("embed",), init="zeros", dtype=name_dtype),
+    }
+
+
+def _mlp(p, x, act=jax.nn.silu, final_act=False):
+    x = act(jnp.einsum("...d,df->...f", x, p["w1"]) + p["b1"])
+    x = jnp.einsum("...f,fo->...o", x, p["w2"]) + p["b2"]
+    return act(x) if final_act else x
+
+
+def param_specs(cfg: EGNNConfig) -> dict:
+    d = cfg.d_hidden
+    layer = lambda: {
+        "phi_e": _mlp_spec(2 * d + 1, d, d),
+        "phi_x": _mlp_spec(d, d, 1),
+        "phi_h": _mlp_spec(2 * d, d, d),
+    }
+    return {
+        "encoder": _mlp_spec(cfg.d_in, d, d),
+        "layers": [layer() for _ in range(cfg.n_layers)],
+        "decoder": _mlp_spec(d, d, cfg.n_out),
+    }
+
+
+def forward(params: dict, batch: dict, cfg: EGNNConfig) -> jax.Array:
+    h = _mlp(params["encoder"], batch["node_feat"], final_act=True)  # (N, d)
+    x = batch["node_pos"].astype(jnp.float32)  # (N, 3)
+    src, dst = batch["src"], batch["dst"]
+    ok = (src >= 0) & (dst >= 0)
+    s = jnp.where(ok, src, 0)
+    t = jnp.where(ok, dst, 0)
+    n = h.shape[0]
+    deg = jnp.maximum(degree(jnp.where(ok, dst, -1), n), 1.0)
+
+    for lp in params["layers"]:
+        diff = x[t] - x[s]  # (E, 3) x_i - x_j with i=dst receiving
+        dist2 = jnp.sum(diff * diff, -1, keepdims=True)
+        m = _mlp(lp["phi_e"], jnp.concatenate([h[t], h[s], dist2], -1), final_act=True)
+        m = jnp.where(ok[:, None], m, 0.0)
+        w = _mlp(lp["phi_x"], m)  # (E, 1)
+        dx = ops.segment_sum(diff * w, jnp.where(ok, dst, -1), n, use_pallas=False)
+        x = x + dx / deg[:, None]
+        agg = ops.segment_sum(m, jnp.where(ok, dst, -1), n, use_pallas=False)
+        h = h + _mlp(lp["phi_h"], jnp.concatenate([h, agg], -1))
+    return h, x
+
+
+def loss_fn(params: dict, batch: dict, cfg: EGNNConfig) -> Tuple[jax.Array, dict]:
+    h, x = forward(params, batch, cfg)
+    out = _mlp(params["decoder"], h)  # (N, n_out)
+    if cfg.task == "graph_regression":
+        gid = batch["graph_id"]
+        okn = gid >= 0
+        pooled = jax.ops.segment_sum(
+            jnp.where(okn[:, None], out, 0.0), jnp.where(okn, gid, 0), cfg.n_graphs
+        )
+        cnt = jax.ops.segment_sum(
+            okn.astype(jnp.float32), jnp.where(okn, gid, 0), cfg.n_graphs
+        )
+        pred = pooled / jnp.maximum(cnt, 1)[:, None]
+        loss = jnp.mean((pred - batch["graph_targets"]) ** 2)
+        return loss, {"mse": loss}
+    mask = batch.get("seed_mask")
+    loss = L.cross_entropy_loss(out, batch["labels"], mask)
+    return loss, {"ce": loss}

@@ -1,0 +1,187 @@
+"""EquiformerV2 [arXiv:2306.12059]: equivariant graph attention via eSCN
+convolutions. n_layers=12, d_hidden=128, l_max=6, m_max=2, n_heads=8.
+
+Feature layout: node irreps x (N, n_coeff, C) where the coefficient axis
+enumerates (l, m) with l <= l_max and |m| <= min(l, m_max):
+  l=0: m=0           (1)
+  l=1: m=-1,0,1      (3)
+  l=2..6: m=-2..2    (5 each, 25)
+  total n_coeff = 29 for (l_max=6, m_max=2)
+
+eSCN structure implemented (the V2 paper's compute pattern):
+  - per-edge SO(2) convolution: coefficients are mixed ONLY along the
+    l-axis within each |m| block (the eSCN sparsity that reduces the
+    O(L^6) Clebsch-Gordan contraction to O(L^3) per-m block matmuls),
+    with radial-basis-conditioned weights (hypernetwork on edge length);
+  - equivariant graph attention: invariant (l=0) channels produce per-head
+    edge scores -> segment-softmax over incoming edges -> weighted
+    aggregation of the per-edge irrep messages;
+  - gated S2-style pointwise activation: l=0 channels gate each l block.
+
+Adaptation note (DESIGN.md §8): the rotation to/from the edge-aligned frame
+(Wigner-D of degree 6) is omitted -- it is a per-edge dense (2l+1)x(2l+1)
+rotation whose cost profile is matched by the retained per-m block matmuls;
+exact SO(3) equivariance is therefore approximate here, while the kernel
+regime (irrep block matmuls + segment softmax + scatter) is faithful.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.param import ParamSpec
+from repro.models import layers as L
+from repro.models.gnn.message_passing import segment_softmax
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class EquiformerV2Config:
+    n_layers: int = 12
+    d_hidden: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    n_rbf: int = 16
+    d_in: int = 16
+    n_out: int = 7
+    task: str = "node_classification"
+    n_graphs: int = 1
+
+
+def coeff_layout(l_max: int, m_max: int):
+    """List of (l, m) in coefficient order + per-|m| index groups."""
+    pairs = []
+    for l in range(l_max + 1):
+        mm = min(l, m_max)
+        for m in range(-mm, mm + 1):
+            pairs.append((l, m))
+    groups = {}
+    for i, (l, m) in enumerate(pairs):
+        groups.setdefault(abs(m), []).append(i)
+    return pairs, groups
+
+
+def n_coeff(l_max: int, m_max: int) -> int:
+    return len(coeff_layout(l_max, m_max)[0])
+
+
+def param_specs(cfg: EquiformerV2Config) -> dict:
+    C = cfg.d_hidden
+    pairs, groups = coeff_layout(cfg.l_max, cfg.m_max)
+    nc = len(pairs)
+
+    def so2_block():
+        # one weight per |m| block: (n_idx, n_idx, C, C) is too big; use
+        # separable: l-mixing (n_idx, n_idx) x channel mixing (C, C)
+        d = {}
+        for m, idxs in groups.items():
+            k = len(idxs)
+            d[f"l_mix_{m}"] = ParamSpec((k, k), (None, None), dtype=jnp.float32)
+            d[f"c_mix_{m}"] = ParamSpec((C, C), ("embed", "mlp"), dtype=jnp.float32)
+        return d
+
+    layer = lambda: {
+        "so2": so2_block(),
+        "rbf_w": ParamSpec((cfg.n_rbf, len(groups)), (None, None), dtype=jnp.float32),
+        "attn_q": ParamSpec((C, cfg.n_heads), ("embed", "heads"), dtype=jnp.float32),
+        "attn_k": ParamSpec((C, cfg.n_heads), ("embed", "heads"), dtype=jnp.float32),
+        "gate_w": ParamSpec((C, (cfg.l_max + 1) * C), ("embed", "mlp"), dtype=jnp.float32),
+        "out_mix": ParamSpec((C, C), ("mlp", "embed"), dtype=jnp.float32),
+    }
+    return {
+        "encoder_w": ParamSpec((cfg.d_in, C), ("feat", "embed"), dtype=jnp.float32),
+        "encoder_b": ParamSpec((C,), ("embed",), init="zeros", dtype=jnp.float32),
+        "layers": [layer() for _ in range(cfg.n_layers)],
+        "decoder_w": ParamSpec((C, cfg.n_out), ("embed", None), dtype=jnp.float32),
+        "decoder_b": ParamSpec((cfg.n_out,), (None,), init="zeros", dtype=jnp.float32),
+    }
+
+
+def _rbf(dist: jax.Array, n_rbf: int, cutoff: float = 5.0) -> jax.Array:
+    mu = jnp.linspace(0.0, cutoff, n_rbf)
+    beta = (n_rbf / cutoff) ** 2
+    return jnp.exp(-beta * (dist[:, None] - mu[None, :]) ** 2)
+
+
+def forward(params: dict, batch: dict, cfg: EquiformerV2Config) -> jax.Array:
+    pairs, groups = coeff_layout(cfg.l_max, cfg.m_max)
+    nc = len(pairs)
+    C = cfg.d_hidden
+    n = batch["node_feat"].shape[0]
+
+    # init irreps: l=0 from encoded features, higher-l zero
+    h0 = jax.nn.silu(batch["node_feat"] @ params["encoder_w"] + params["encoder_b"])
+    x = jnp.zeros((n, nc, C), jnp.float32).at[:, 0, :].set(h0)
+
+    src, dst = batch["src"], batch["dst"]
+    ok = (src >= 0) & (dst >= 0)
+    s = jnp.where(ok, src, 0)
+    t = jnp.where(ok, dst, 0)
+    pos = batch["node_pos"].astype(jnp.float32)
+    dist = jnp.sqrt(jnp.sum((pos[t] - pos[s]) ** 2, -1) + 1e-9)
+    rbf = _rbf(dist, cfg.n_rbf)  # (E, n_rbf)
+
+    l_of = jnp.array([l for l, m in pairs], jnp.int32)  # (nc,)
+
+    for lp in params["layers"]:
+        # --- per-edge eSCN (SO(2)) convolution ---------------------------
+        msg = x[s]  # (E, nc, C) source irreps gathered per edge
+        radial = jax.nn.silu(rbf @ lp["rbf_w"])  # (E, n_groups)
+        out_msg = jnp.zeros_like(msg)
+        for gi, (m, idxs) in enumerate(sorted(groups.items())):
+            block = msg[:, jnp.array(idxs), :]  # (E, k, C)
+            block = jnp.einsum("ekc,kl->elc", block, lp["so2"][f"l_mix_{m}"])
+            block = jnp.einsum("elc,cd->eld", block, lp["so2"][f"c_mix_{m}"])
+            block = block * radial[:, gi, None, None]
+            out_msg = out_msg.at[:, jnp.array(idxs), :].set(block)
+
+        # --- equivariant graph attention over edges ----------------------
+        qi = x[t][:, 0, :] @ lp["attn_q"]  # (E, H) invariant queries (dst)
+        ki = out_msg[:, 0, :] @ lp["attn_k"]  # (E, H) invariant keys (msg)
+        score = qi * ki / np.sqrt(C)
+        # bounded scores (softcap) so the distributed streaming softmax can
+        # use an exact constant shift (models/gnn/distributed.py)
+        score = 8.0 * jnp.tanh(score / 8.0)
+        alpha = segment_softmax(
+            jnp.where(ok[:, None], score, -jnp.inf), jnp.where(ok, dst, -1), n
+        )  # (E, H)
+        alpha = jnp.where(ok[:, None], alpha, 0.0)
+        # head-average weighting (channels grouped across heads)
+        w = jnp.mean(alpha, -1)[:, None, None]  # (E,1,1)
+        weighted = (out_msg * w).reshape(out_msg.shape[0], -1)  # (E, nc*C)
+        aggv = ops.segment_sum(
+            weighted, jnp.where(ok, dst, -1), n, use_pallas=False
+        ).reshape(n, nc, C)
+
+        # --- gated pointwise (S2-style) activation -----------------------
+        gates = jax.nn.sigmoid(aggv[:, 0, :] @ lp["gate_w"]).reshape(
+            n, cfg.l_max + 1, C
+        )  # one gate per l per channel
+        g_full = gates[:, l_of, :]  # (N, nc, C)
+        upd = jnp.einsum("nkc,cd->nkd", aggv * g_full, lp["out_mix"])
+        x = x + upd
+    return x
+
+
+def loss_fn(params: dict, batch: dict, cfg: EquiformerV2Config) -> Tuple[jax.Array, dict]:
+    x = forward(params, batch, cfg)
+    inv = x[:, 0, :]  # invariant channel
+    out = inv @ params["decoder_w"] + params["decoder_b"]
+    if cfg.task == "graph_regression":
+        gid = batch["graph_id"]
+        okn = gid >= 0
+        pooled = jax.ops.segment_sum(
+            jnp.where(okn[:, None], out, 0.0), jnp.where(okn, gid, 0), cfg.n_graphs
+        )
+        cnt = jax.ops.segment_sum(okn.astype(jnp.float32), jnp.where(okn, gid, 0), cfg.n_graphs)
+        pred = pooled / jnp.maximum(cnt, 1)[:, None]
+        loss = jnp.mean((pred - batch["graph_targets"]) ** 2)
+        return loss, {"mse": loss}
+    loss = L.cross_entropy_loss(out, batch["labels"], batch.get("seed_mask"))
+    return loss, {"ce": loss}

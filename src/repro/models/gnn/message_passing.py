@@ -1,0 +1,72 @@
+"""Edge-index message passing primitives (segment-reduce based)."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.distributed.mesh_utils import shard_constraint
+
+
+def degree(dst: jax.Array, n: int) -> jax.Array:
+    ok = dst >= 0
+    return jax.ops.segment_sum(
+        ok.astype(jnp.float32), jnp.where(ok, dst, 0), num_segments=n
+    )
+
+
+def aggregate(
+    messages: jax.Array,  # (E, D)
+    dst: jax.Array,  # (E,) int32, -1 padded
+    n: int,
+    kinds: Sequence[str] = ("sum",),
+    use_pallas="auto",
+) -> list:
+    """Multi-aggregator segment reduce; returns one (N, D) array per kind."""
+    out = []
+    for kind in kinds:
+        if kind == "sum":
+            out.append(ops.segment_sum(messages, dst, n, use_pallas=use_pallas))
+        elif kind == "mean":
+            out.append(ops.segment_mean(messages, dst, n, use_pallas=use_pallas))
+        elif kind == "max":
+            out.append(ops.segment_max(messages, dst, n))
+        elif kind == "min":
+            out.append(ops.segment_min(messages, dst, n))
+        elif kind == "std":
+            m1 = ops.segment_mean(messages, dst, n, use_pallas=use_pallas)
+            m2 = ops.segment_mean(messages * messages, dst, n, use_pallas=use_pallas)
+            out.append(jnp.sqrt(jnp.maximum(m2 - m1 * m1, 0.0) + 1e-6))
+        else:
+            raise ValueError(kind)
+    return out
+
+
+def segment_softmax(scores: jax.Array, dst: jax.Array, n: int) -> jax.Array:
+    """Softmax over incoming edges per destination node.
+
+    scores: (E, H); returns normalized (E, H)."""
+    ok = (dst >= 0)[:, None]
+    safe = jnp.where(dst >= 0, dst, 0)
+    smax = jax.ops.segment_max(
+        jnp.where(ok, scores, -jnp.inf), safe, num_segments=n
+    )  # (N, H)
+    smax = jnp.where(jnp.isfinite(smax), smax, 0.0)
+    ex = jnp.where(ok, jnp.exp(scores - smax[safe]), 0.0)
+    denom = jax.ops.segment_sum(ex, safe, num_segments=n)  # (N, H)
+    return ex / jnp.maximum(denom[safe], 1e-9)
+
+
+def shard_graph_batch(batch: dict) -> dict:
+    """Apply logical sharding constraints to a GNN batch."""
+    out = dict(batch)
+    for k in ("node_feat", "node_pos"):
+        if k in out:
+            out[k] = shard_constraint(out[k], ("nodes", None))
+    for k in ("src", "dst"):
+        if k in out:
+            out[k] = shard_constraint(out[k], ("edges",))
+    return out

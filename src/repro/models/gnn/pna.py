@@ -1,0 +1,86 @@
+"""PNA: Principal Neighbourhood Aggregation [arXiv:2004.05718].
+
+n_layers=4, d_hidden=75; aggregators {mean, max, min, std} x scalers
+{identity, amplification, attenuation} -> 12 aggregate views concatenated
+then linearly mixed (the paper's combination), with residuals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.param import ParamSpec
+from repro.models import layers as L
+from repro.models.gnn.message_passing import aggregate, degree
+
+
+AGGREGATORS = ("mean", "max", "min", "std")
+N_SCALERS = 3  # identity, amplification, attenuation
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_in: int = 16
+    n_out: int = 7
+    avg_log_degree: float = 2.0  # delta (normalizer), dataset statistic
+    task: str = "node_classification"
+
+
+def param_specs(cfg: PNAConfig) -> dict:
+    d = cfg.d_hidden
+    layer = lambda: {
+        "w_msg": ParamSpec((2 * d, d), ("embed", "mlp"), dtype=jnp.float32),
+        "b_msg": ParamSpec((d,), ("mlp",), init="zeros", dtype=jnp.float32),
+        "w_comb": ParamSpec(
+            (len(AGGREGATORS) * N_SCALERS * d + d, d), ("mlp", "embed"), dtype=jnp.float32
+        ),
+        "b_comb": ParamSpec((d,), ("embed",), init="zeros", dtype=jnp.float32),
+    }
+    return {
+        "w_in": ParamSpec((cfg.d_in, d), ("feat", "embed"), dtype=jnp.float32),
+        "b_in": ParamSpec((d,), ("embed",), init="zeros", dtype=jnp.float32),
+        "layers": [layer() for _ in range(cfg.n_layers)],
+        "w_out": ParamSpec((d, cfg.n_out), ("embed", None), dtype=jnp.float32),
+        "b_out": ParamSpec((cfg.n_out,), (None,), init="zeros", dtype=jnp.float32),
+    }
+
+
+def forward(params: dict, batch: dict, cfg: PNAConfig) -> jax.Array:
+    h = jax.nn.relu(batch["node_feat"] @ params["w_in"] + params["b_in"])
+    src, dst = batch["src"], batch["dst"]
+    ok = (src >= 0) & (dst >= 0)
+    s = jnp.where(ok, src, 0)
+    n = h.shape[0]
+    dstm = jnp.where(ok, dst, -1)
+    deg = degree(dstm, n)
+    logd = jnp.log(deg + 1.0)
+    delta = cfg.avg_log_degree
+    s_amp = (logd / delta)[:, None]
+    s_att = (delta / jnp.maximum(logd, 1e-6))[:, None]
+
+    for lp in params["layers"]:
+        msg_in = jnp.concatenate([h[jnp.where(ok, dst, 0)], h[s]], -1)
+        m = jax.nn.relu(msg_in @ lp["w_msg"] + lp["b_msg"])
+        m = jnp.where(ok[:, None], m, 0.0)
+        aggs = aggregate(m, dstm, n, kinds=AGGREGATORS, use_pallas=False)
+        views = []
+        for a in aggs:
+            views.extend([a, a * s_amp, a * s_att])
+        combined = jnp.concatenate(views + [h], -1)
+        h = h + jax.nn.relu(combined @ lp["w_comb"] + lp["b_comb"])
+    return h
+
+
+def loss_fn(params: dict, batch: dict, cfg: PNAConfig) -> Tuple[jax.Array, dict]:
+    h = forward(params, batch, cfg)
+    out = h @ params["w_out"] + params["b_out"]
+    mask = batch.get("seed_mask")
+    loss = L.cross_entropy_loss(out, batch["labels"], mask)
+    return loss, {"ce": loss}

@@ -1,0 +1,124 @@
+"""Shared neural-net layers (pure functions over param pytrees)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope(
+    x: jax.Array,  # (..., S, D)
+    positions: jax.Array,  # (..., S) int32
+    theta: float = 10000.0,
+) -> jax.Array:
+    """Rotary position embedding on the last dim (split-half convention)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, b_in, w_out: jax.Array, b_out) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, w_in)
+    if b_in is not None:
+        h = h + b_in
+    h = jax.nn.gelu(h)
+    o = jnp.einsum("...f,fd->...d", h, w_out)
+    if b_out is not None:
+        o = o + b_out
+    return o
+
+
+def mlp_stack(x: jax.Array, weights, biases, act=jax.nn.relu, final_act: bool = False):
+    """Generic MLP given lists of (w, b); used by GNN/recsys towers."""
+    n = len(weights)
+    for i, (w, b) in enumerate(zip(weights, biases)):
+        x = jnp.einsum("...d,df->...f", x, w)
+        if b is not None:
+            x = x + b
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def softcap(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def cross_entropy_loss(
+    logits: jax.Array,  # (..., V) float
+    labels: jax.Array,  # (...,) int32
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)
+
+
+def chunked_unembed_xent(
+    x: jax.Array,  # (B, S, d) final hidden states
+    unembed: jax.Array,  # (d, V)
+    labels: jax.Array,  # (B, S) int32
+    cap: Optional[float] = None,
+    chunk: int = 512,
+) -> jax.Array:
+    """Fused unembed + cross-entropy, seq-chunked so the full (B, S, V)
+    logits tensor never materializes (peak = one (B, chunk, V_shard) slice).
+    Each chunk is remat'ed: the backward recomputes its logits instead of
+    saving them. Math-identical to einsum + cross_entropy_loss (mean NLL)."""
+    B, S, d = x.shape
+    if S % chunk != 0 or S <= chunk:
+        logits = jnp.einsum("bsd,dv->bsv", x, unembed)
+        logits = softcap(logits.astype(jnp.float32), cap)
+        return cross_entropy_loss(logits, labels)
+    n = S // chunk
+    xc = x.reshape(B, n, chunk, d).swapaxes(0, 1)  # (n, B, chunk, d)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def one(args):
+        xi, li = args
+        logits = jnp.einsum("bsd,dv->bsv", xi, unembed).astype(jnp.float32)
+        logits = softcap(logits, cap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    per_chunk = jax.lax.map(one, (xc, lc))  # (n,)
+    return jnp.sum(per_chunk) / (B * S)

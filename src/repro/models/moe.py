@@ -1,0 +1,303 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Token->expert dispatch is the same primitive as gRouting's query->processor
+dispatch (see repro.core.dispatch and DESIGN.md §2): router scores + finite
+per-destination capacity. MoE uses the standard drop-on-overflow semantics
+(capacity_factor), gRouting re-routes (stealing); both share the
+rank-within-destination machinery.
+
+Expert parallelism: experts are padded to a multiple of the model-axis size
+(qwen2-moe: 60 -> 64) and sharded over "experts" -> model. Under a
+multi-device mesh the shard_map path (_moe_ffn_shard_map) runs: activations
+are model-replicated, so each model shard dispatches its data-shard's
+tokens to its resident experts locally and ONE psum combines -- no token
+all_to_all, no GSPMD-hostile global sort (DESIGN.md §9).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.mesh_utils import shard_constraint
+from repro.models.param import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int  # real experts (router width)
+    n_experts_padded: int  # for EP divisibility (>= n_experts)
+    top_k: int
+    d_ff_expert: int
+    d_ff_shared: int = 0  # 0 = no shared expert
+    capacity_factor: float = 1.25
+    dtype: object = jnp.bfloat16
+
+
+def moe_param_specs(cfg: MoEConfig) -> dict:
+    E, d, fe = cfg.n_experts_padded, cfg.d_model, cfg.d_ff_expert
+    specs = {
+        "router": ParamSpec((d, cfg.n_experts), ("embed", None), dtype=jnp.float32),
+        "w_gate": ParamSpec((E, d, fe), ("experts", "embed", "mlp"), dtype=cfg.dtype),
+        "w_up": ParamSpec((E, d, fe), ("experts", "embed", "mlp"), dtype=cfg.dtype),
+        "w_down": ParamSpec((E, fe, d), ("experts", "mlp", "embed"), dtype=cfg.dtype),
+    }
+    if cfg.d_ff_shared:
+        fs = cfg.d_ff_shared
+        specs["shared"] = {
+            "w_gate": ParamSpec((d, fs), ("embed", "mlp"), dtype=cfg.dtype),
+            "w_up": ParamSpec((d, fs), ("embed", "mlp"), dtype=cfg.dtype),
+            "w_down": ParamSpec((fs, d), ("mlp", "embed"), dtype=cfg.dtype),
+        }
+    return specs
+
+
+def _rank_within(dest: jax.Array, n_dest: int) -> jax.Array:
+    T = dest.shape[0]
+    order = jnp.argsort(dest, stable=True)
+    sd = dest[order]
+    first = jnp.searchsorted(sd, sd, side="left")
+    pos_sorted = jnp.arange(T) - first
+    return jnp.zeros((T,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+
+
+def moe_ffn(
+    params: dict,
+    x: jax.Array,  # (T, d) tokens (flattened batch*seq)
+    cfg: MoEConfig,
+    capacity: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out (T, d), aux_loss scalar).
+
+    Under a mesh with a "model" axis (production lowering) this dispatches
+    through the shard_map path below: the global-argsort ranking cannot be
+    partitioned by GSPMD and replicates the (T*k, d) token gather on every
+    device (observed 16-31 GB/device on the assigned MoE cells). On a single
+    device (smoke tests) the plain sort-based path runs:
+
+      1. router top-k                     (T, k)
+      2. rank of each assignment within its expert; drop rank >= capacity
+      3. scatter tokens into (E, C, d) expert buffers
+      4. grouped GEMMs per expert (einsum over the E axis)
+      5. combine back with gate weights
+    """
+    from repro.distributed.mesh_utils import current_rules
+
+    lr = current_rules()
+    if lr is not None and lr.mesh.shape.get("model", 1) > 1:
+        return _moe_ffn_shard_map(params, x, cfg, lr, capacity)
+    T, d = x.shape
+    E, Ep, k = cfg.n_experts, cfg.n_experts_padded, cfg.top_k
+    if capacity is None:
+        capacity = int(np.ceil(T * k / E * cfg.capacity_factor))
+        capacity = max(8, -(-capacity // 8) * 8)  # round up to 8
+
+    logits = x.astype(jnp.float32) @ params["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)  # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # aux load-balance loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(me * ce)
+
+    flat_e = idx.reshape(-1).astype(jnp.int32)  # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    flat_g = gates.reshape(-1)
+    rank = _rank_within(flat_e, E)
+    keep = rank < capacity
+    dest_e = jnp.where(keep, flat_e, Ep)  # overflow -> dropped (OOB)
+    dest_c = jnp.where(keep, rank, 0)
+
+    buf = jnp.zeros((Ep, capacity, d), x.dtype)
+    buf = buf.at[dest_e, dest_c].set(x[flat_t], mode="drop")
+    buf = shard_constraint(buf, ("experts", None, "embed"))
+
+    h = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    h = jax.nn.silu(h) * u
+    y = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    y = shard_constraint(y, ("experts", None, "embed"))
+
+    # combine: gather each assignment's output, weight by gate, sum over k
+    contrib = y[dest_e.clip(0, Ep - 1), dest_c] * jnp.where(keep, flat_g, 0.0)[:, None].astype(y.dtype)
+    out = jnp.zeros((T, d), y.dtype).at[flat_t].add(contrib)
+
+    if cfg.d_ff_shared:
+        s = params["shared"]
+        g = jnp.einsum("td,df->tf", x, s["w_gate"])
+        uu = jnp.einsum("td,df->tf", x, s["w_up"])
+        out = out + jnp.einsum("tf,fd->td", jax.nn.silu(g) * uu, s["w_down"])
+    return out.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# distributed MoE: shard_map dispatch (expert parallelism over "model")
+# ---------------------------------------------------------------------------
+
+
+def _moe_ffn_shard_map(
+    params: dict, x: jax.Array, cfg: MoEConfig, lr, capacity: Optional[int]
+) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE without a token all_to_all.
+
+    Activations are replicated along "model" (TP convention), so every model
+    shard already holds the tokens of its data shard: each shard computes the
+    (deterministic, redundant) router decision for its T_local tokens,
+    scatters ONLY the tokens destined to its E_local resident experts into a
+    local (E_local, C, d) buffer, runs its expert GEMMs, and scatter-adds
+    partial outputs; ONE psum over "model" combines expert (and d_ff-sharded
+    shared-expert) contributions. FSDP weight shards are all-gathered over
+    "data" inside the body (the standard per-layer FSDP gather; transposes to
+    reduce-scatter in the backward). Capacity is enforced per data shard:
+    C = ceil(T_local * k / E * capacity_factor)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = lr.mesh
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    # FSDP weight shards live on "data" only (params are replicated across
+    # "pod"); gathering over pod too would double the contraction dims
+    fsdp_axes = tuple(a for a in ("data",) if a in mesh.shape)
+    n_model = mesh.shape["model"]
+    E, Ep, k = cfg.n_experts, cfg.n_experts_padded, cfg.top_k
+    assert Ep % n_model == 0, (Ep, n_model)
+    E_loc = Ep // n_model
+    T, d = x.shape
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    T_loc = T // n_data
+    cap = capacity
+    if cap is None:
+        cap = int(np.ceil(T_loc * k / E * cfg.capacity_factor))
+        cap = max(8, -(-cap // 8) * 8)
+
+    has_shared = bool(cfg.d_ff_shared)
+
+    # weight-stationary regime (decode): with a handful of tokens per shard,
+    # gathering FSDP weight shards (GBs per layer) dwarfs the activations;
+    # instead contract against the LOCAL d-slice of the weights and psum the
+    # tiny partial activations over "data". Criterion: tokens-moved bytes
+    # per layer << weight bytes gathered per layer.
+    weight_stationary = bool(fsdp_axes) and T_loc * k <= 64
+    n_fsdp = 1
+    for a in fsdp_axes:
+        n_fsdp *= mesh.shape[a]
+
+    def body(x_loc, router, wg, wu, wd, *shared_w):
+        # x_loc (T_loc, d); router (d/n_data, E); wg (E_loc, d/n_data, f)
+        if fsdp_axes:
+            router = jax.lax.all_gather(router, fsdp_axes, axis=0, tiled=True)
+        if weight_stationary:
+            # every data shard must process the SAME tokens for the d-slice
+            # partial sums to be meaningful: gather the (tiny) token batch
+            # over "data" and slice our tokens back out at the end.
+            x_eff = jax.lax.all_gather(x_loc, fsdp_axes, axis=0, tiled=True)
+            T_eff, cap_eff = T_loc * n_fsdp, cap * n_fsdp
+            wg_f, wu_f, wd_f = wg, wu, wd  # stay sharded (weight-stationary)
+        else:
+            x_eff, T_eff, cap_eff = x_loc, T_loc, cap
+            if fsdp_axes:
+                wg_f = jax.lax.all_gather(wg, fsdp_axes, axis=1, tiled=True)
+                wu_f = jax.lax.all_gather(wu, fsdp_axes, axis=1, tiled=True)
+                wd_f = jax.lax.all_gather(wd, fsdp_axes, axis=2, tiled=True)
+            else:
+                wg_f, wu_f, wd_f = wg, wu, wd
+        logits = x_eff.astype(jnp.float32) @ router  # (T_eff, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+        me_p = jnp.mean(probs, axis=0)
+        ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T_eff * k)
+        aux = E * jnp.sum(me_p * ce)
+        aux = jax.lax.pmean(aux, data_axes) if data_axes else aux
+
+        flat_e = idx.reshape(-1).astype(jnp.int32)  # (T_eff*k,)
+        flat_t = jnp.repeat(jnp.arange(T_eff, dtype=jnp.int32), k)
+        flat_g = gates.reshape(-1)
+        rank = _rank_within(flat_e, E)
+        keep = rank < cap_eff
+        me = jax.lax.axis_index("model")
+        lo = me * E_loc
+        mine = keep & (flat_e >= lo) & (flat_e < lo + E_loc)
+        dest_e = jnp.where(mine, flat_e - lo, E_loc)  # OOB drop for others
+        dest_c = jnp.where(mine, rank, 0)
+
+        buf = jnp.zeros((E_loc, cap_eff, d), x_eff.dtype)
+        buf = buf.at[dest_e, dest_c].set(
+            jnp.where(mine[:, None], x_eff[flat_t], 0), mode="drop")
+        if weight_stationary:
+            # contract the local d-slice; psum the (tiny) partial activations
+            d_loc = d // n_fsdp
+            di = jax.lax.axis_index(fsdp_axes[0])
+            buf_s = jax.lax.dynamic_slice_in_dim(buf, di * d_loc, d_loc, axis=2)
+            h = jax.lax.psum(jnp.einsum("ecd,edf->ecf", buf_s, wg_f), fsdp_axes)
+            u = jax.lax.psum(jnp.einsum("ecd,edf->ecf", buf_s, wu_f), fsdp_axes)
+            y_s = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, wd_f)  # (E,C,d_loc)
+            y = jax.lax.all_gather(y_s, fsdp_axes, axis=2, tiled=True)
+        else:
+            h = jnp.einsum("ecd,edf->ecf", buf, wg_f)
+            u = jnp.einsum("ecd,edf->ecf", buf, wu_f)
+            y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, wd_f)
+
+        contrib = y[dest_e.clip(0, E_loc - 1), dest_c] * jnp.where(
+            mine, flat_g, 0.0)[:, None].astype(y.dtype)
+        out = jnp.zeros((T_eff, d), y.dtype).at[flat_t].add(contrib)
+
+        if has_shared:
+            sg, su, sd = shared_w  # (d/n_data, fs/n_model) etc.
+            if weight_stationary:
+                d_loc = d // n_fsdp
+                di = jax.lax.axis_index(fsdp_axes[0])
+                x_s = jax.lax.dynamic_slice_in_dim(x_eff, di * d_loc, d_loc, axis=1)
+                hs = jax.lax.psum(jnp.einsum("td,df->tf", x_s, sg), fsdp_axes)
+                us = jax.lax.psum(jnp.einsum("td,df->tf", x_s, su), fsdp_axes)
+                o_s = jnp.einsum("tf,fd->td", jax.nn.silu(hs) * us, sd)
+                out = out + jax.lax.all_gather(o_s, fsdp_axes, axis=1, tiled=True)
+            else:
+                if fsdp_axes:
+                    sg = jax.lax.all_gather(sg, fsdp_axes, axis=0, tiled=True)
+                    su = jax.lax.all_gather(su, fsdp_axes, axis=0, tiled=True)
+                    sd = jax.lax.all_gather(sd, fsdp_axes, axis=1, tiled=True)
+                hs = jnp.einsum("td,df->tf", x_eff, sg)
+                us = jnp.einsum("td,df->tf", x_eff, su)
+                out = out + jnp.einsum("tf,fd->td", jax.nn.silu(hs) * us, sd)
+        out = jax.lax.psum(out, "model")
+        if weight_stationary:
+            di = jax.lax.axis_index(fsdp_axes[0])
+            out = jax.lax.dynamic_slice_in_dim(out, di * T_loc, T_loc, axis=0)
+        return out.astype(x_loc.dtype), aux
+
+    dp = P(data_axes) if data_axes else P()
+    tok = P(data_axes if data_axes else None, None)
+    in_specs = [
+        tok,  # x
+        P("data" if "data" in mesh.shape else None, None),  # router (embed->data)
+        P("model", "data" if "data" in mesh.shape else None, None),  # wg
+        P("model", "data" if "data" in mesh.shape else None, None),  # wu
+        P("model", None, "data" if "data" in mesh.shape else None),  # wd
+    ]
+    args = [x, params["router"], params["w_gate"], params["w_up"], params["w_down"]]
+    if has_shared:
+        s = params["shared"]
+        in_specs += [
+            P("data" if "data" in mesh.shape else None, "model"),  # shared gate
+            P("data" if "data" in mesh.shape else None, "model"),  # shared up
+            P("model", "data" if "data" in mesh.shape else None),  # shared down
+        ]
+        args += [s["w_gate"], s["w_up"], s["w_down"]]
+
+    mapped = shard_map(
+        body, mesh=mesh, in_specs=tuple(in_specs), out_specs=(tok, P()),
+        check_rep=False,
+    )
+    out, aux = mapped(*args)
+    return out, aux

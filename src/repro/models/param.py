@@ -1,0 +1,76 @@
+"""Single-source-of-truth parameter specs.
+
+A model defines ONE pytree of ParamSpec (shape + logical axes + init);
+everything else derives from it:
+
+  init_params      -- random arrays (smoke/e2e training)
+  abstract_params  -- ShapeDtypeStruct (dry-run lowering; no allocation)
+  param_pspecs     -- PartitionSpec pytree (pjit in_shardings, checkpoints)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.mesh_utils import LogicalRules, resolve_pspec
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis per dim
+    init: str = "normal"  # normal | zeros | ones | embed | uniform
+    scale: Optional[float] = None  # None -> fan-in
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, key: jax.Array):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, s.dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, s.dtype))
+        else:
+            fan_in = s.shape[0] if len(s.shape) >= 2 else max(s.shape[-1], 1)
+            scale = s.scale if s.scale is not None else 1.0 / np.sqrt(fan_in)
+            out.append((jax.random.normal(k, s.shape, jnp.float32) * scale).astype(s.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=_is_spec
+    )
+
+
+def param_pspecs(specs, lr: Optional[LogicalRules] = None):
+    return jax.tree.map(
+        lambda s: resolve_pspec(s.axes, s.shape, lr), specs, is_leaf=_is_spec
+    )
+
+
+def param_count(specs) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(specs, is_leaf=_is_spec))
+
+
+def param_bytes(specs) -> int:
+    return sum(
+        int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+        for s in jax.tree.leaves(specs, is_leaf=_is_spec)
+    )

@@ -1,0 +1,3 @@
+"""RecSys: DIN (Deep Interest Network) + embedding-bag substrate."""
+
+from repro.models.recsys import din

@@ -1,0 +1,425 @@
+"""Decoder-only LM transformer covering all five assigned architectures.
+
+Features (per-arch flags in LMConfig):
+  - GQA with fused-dim tensor parallelism; optional QKV bias (qwen2.5)
+  - RoPE; per-head qk RMS-norm (qwen3)
+  - alternating local(sliding-window)/global attention + logit softcap +
+    post-norms + embedding scaling + final-logit softcap (gemma2)
+  - MoE FFN with shared experts (qwen2-moe) / fine-grained top-4 (dbrx)
+  - scan-over-layer-groups with remat (training memory)
+  - KV-cache decode path (serve_step), incl. 500k-token caches
+
+Layer stacking: parameters carry a leading `stack` axis of size
+n_layers // group_size where group_size = len(local/global pattern) (1 for
+uniform archs); jax.lax.scan over that axis keeps compile time and HLO size
+O(1) in depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.mesh_utils import shard_constraint
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models.moe import MoEConfig, moe_ffn, moe_param_specs
+from repro.models.param import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    # MoE (n_experts == 0 -> dense)
+    n_experts: int = 0
+    n_experts_padded: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    # attention flavor
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    window: Optional[int] = None  # sliding window width for local layers
+    pattern: Tuple[str, ...] = ("global",)  # per-group layer kinds
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    embed_scale: bool = False  # gemma: embeddings * sqrt(d_model)
+    post_norms: bool = False  # gemma2: post-attn/post-ffn norms
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    # system
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    grad_accum: int = 1  # microbatches per train step
+    scan_unroll: bool = False  # unroll the layer scan (dry-run flop counting)
+    xent_chunk: int = 512  # seq chunk for the fused unembed+CE loss head
+    attn_chunk: bool = True  # q-chunked jnp attention on non-TPU backends
+
+    @property
+    def moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def group_size(self) -> int:
+        return len(self.pattern)
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.group_size == 0
+        return self.n_layers // self.group_size
+
+    def moe_cfg(self) -> MoEConfig:
+        return MoEConfig(
+            d_model=self.d_model,
+            n_experts=self.n_experts,
+            n_experts_padded=self.n_experts_padded or self.n_experts,
+            top_k=self.top_k,
+            d_ff_expert=self.d_ff_expert,
+            d_ff_shared=self.d_ff_shared,
+            capacity_factor=self.capacity_factor,
+            dtype=self.dtype,
+        )
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _stacked(spec: ParamSpec, n: int) -> ParamSpec:
+    return ParamSpec(
+        (n,) + spec.shape, ("stack",) + spec.axes, spec.init, spec.scale, spec.dtype
+    )
+
+
+def _attn_specs(cfg: LMConfig) -> dict:
+    d, H, Hk, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s: dict = {
+        "wq": ParamSpec((d, H * Dh), ("embed", "heads"), dtype=cfg.dtype),
+        "wk": ParamSpec((d, Hk * Dh), ("embed", "kv_heads"), dtype=cfg.dtype),
+        "wv": ParamSpec((d, Hk * Dh), ("embed", "kv_heads"), dtype=cfg.dtype),
+        "wo": ParamSpec((H * Dh, d), ("heads", "embed"), dtype=cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((H * Dh,), ("heads",), init="zeros", dtype=cfg.dtype)
+        s["bk"] = ParamSpec((Hk * Dh,), ("kv_heads",), init="zeros", dtype=cfg.dtype)
+        s["bv"] = ParamSpec((Hk * Dh,), ("kv_heads",), init="zeros", dtype=cfg.dtype)
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((Dh,), ("head_dim",), init="zeros", dtype=jnp.float32)
+        s["k_norm"] = ParamSpec((Dh,), ("head_dim",), init="zeros", dtype=jnp.float32)
+    return s
+
+
+def _ffn_specs(cfg: LMConfig) -> dict:
+    if cfg.moe:
+        return moe_param_specs(cfg.moe_cfg())
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamSpec((d, f), ("embed", "mlp"), dtype=cfg.dtype),
+        "w_up": ParamSpec((d, f), ("embed", "mlp"), dtype=cfg.dtype),
+        "w_down": ParamSpec((f, d), ("mlp", "embed"), dtype=cfg.dtype),
+    }
+
+
+def _layer_specs(cfg: LMConfig) -> dict:
+    s = {
+        "attn": _attn_specs(cfg),
+        "ffn": _ffn_specs(cfg),
+        "input_norm": ParamSpec((cfg.d_model,), ("embed",), init="zeros", dtype=jnp.float32),
+        "post_attn_norm": ParamSpec((cfg.d_model,), ("embed",), init="zeros", dtype=jnp.float32),
+    }
+    if cfg.post_norms:
+        s["post_attn_out_norm"] = ParamSpec(
+            (cfg.d_model,), ("embed",), init="zeros", dtype=jnp.float32
+        )
+        s["post_ffn_norm"] = ParamSpec(
+            (cfg.d_model,), ("embed",), init="zeros", dtype=jnp.float32
+        )
+    return s
+
+
+def lm_param_specs(cfg: LMConfig) -> dict:
+    group = {
+        str(i): jax.tree.map(
+            lambda s: _stacked(s, cfg.n_groups),
+            _layer_specs(cfg),
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+        for i in range(cfg.group_size)
+    }
+    return {
+        "embed": ParamSpec(
+            (cfg.vocab, cfg.d_model), ("vocab", "embed"), scale=1.0, dtype=cfg.dtype
+        ),
+        "layers": group,
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), init="zeros", dtype=jnp.float32),
+        "unembed": ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab"), dtype=cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _attention(
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    cfg: LMConfig,
+    kind: str,  # local | global
+    positions: jax.Array,  # (B, S)
+    kv_cache: Optional[dict] = None,  # decode: {"k","v" (B,Hk,Smax,Dh), "pos" ()}
+) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, d = x.shape
+    H, Hk, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, Hk, Dh)
+    v = v.reshape(B, S, Hk, Dh)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = L.rope(q.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta)  # (B,H,S,Dh)
+    k = L.rope(k.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta)
+    v = v.swapaxes(1, 2)
+
+    window = cfg.window if kind == "local" else None
+    new_cache = None
+    if kv_cache is None:
+        q = shard_constraint(q, ("batch", "heads", "seq", None))
+        out = ops.attention(
+            q, k, v, causal=True, window=window, softcap=cfg.attn_softcap,
+            allow_chunk=cfg.attn_chunk,
+        )  # (B,H,S,Dh)
+        new_cache = {"k": k, "v": v}  # prefill KV (collected when requested)
+    else:
+        pos = kv_cache["pos"]  # () int32 -- current length
+        ck = jax.lax.dynamic_update_slice(kv_cache["k"], k.astype(kv_cache["k"].dtype), (0, 0, pos, 0))
+        cv = jax.lax.dynamic_update_slice(kv_cache["v"], v.astype(kv_cache["v"].dtype), (0, 0, pos, 0))
+        Smax = ck.shape[2]
+        kpos = jnp.arange(Smax)[None, :]
+        qpos = pos + jnp.arange(S)[:, None]
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        group = H // Hk
+        kr = jnp.repeat(ck, group, axis=1)
+        vr = jnp.repeat(cv, group, axis=1)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q, kr).astype(jnp.float32) / np.sqrt(Dh)
+        logits = L.softcap(logits, cfg.attn_softcap)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", probs.astype(q.dtype), vr)
+        new_cache = {"k": ck, "v": cv, "pos": pos + S}
+
+    out = out.swapaxes(1, 2).reshape(B, S, H * Dh)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+def _ffn(p: dict, x: jax.Array, cfg: LMConfig) -> Tuple[jax.Array, jax.Array]:
+    B, S, d = x.shape
+    if cfg.moe:
+        out, aux = moe_ffn(p, x.reshape(B * S, d), cfg.moe_cfg())
+        return out.reshape(B, S, d), aux
+    return L.swiglu(x, p["w_gate"], p["w_up"], p["w_down"]), jnp.zeros((), jnp.float32)
+
+
+def _layer(
+    p: dict,
+    x: jax.Array,
+    cfg: LMConfig,
+    kind: str,
+    positions: jax.Array,
+    kv_cache: Optional[dict] = None,
+) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
+    h = L.rms_norm(x, p["input_norm"], cfg.norm_eps)
+    attn_out, new_cache = _attention(p["attn"], h, cfg, kind, positions, kv_cache)
+    if cfg.post_norms:
+        attn_out = L.rms_norm(attn_out, p["post_attn_out_norm"], cfg.norm_eps)
+    x = x + attn_out
+    h = L.rms_norm(x, p["post_attn_norm"], cfg.norm_eps)
+    ffn_out, aux = _ffn(p["ffn"], h, cfg)
+    if cfg.post_norms:
+        ffn_out = L.rms_norm(ffn_out, p["post_ffn_norm"], cfg.norm_eps)
+    x = x + ffn_out
+    x = shard_constraint(x, ("batch", "seq", "embed"))
+    return x, aux, new_cache
+
+
+def _group_fn(cfg: LMConfig, collect_kv: bool = False):
+    """One scan step = one layer group (e.g. gemma2's local+global pair)."""
+
+    def fn(x_aux, group_params, positions):
+        x, aux = x_aux
+        kvs = {}
+        for i, kind in enumerate(cfg.pattern):
+            x, a, kv = _layer(group_params[str(i)], x, cfg, kind, positions)
+            aux = aux + a
+            if collect_kv:
+                kvs[str(i)] = kv
+        return (x, aux), (kvs if collect_kv else None)
+
+    return fn
+
+
+def trunk(params: dict, tokens: jax.Array, cfg: LMConfig) -> Tuple[jax.Array, jax.Array]:
+    """Embed + layer stack + final norm. tokens: (B, S) -> (x (B,S,d), aux)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * np.sqrt(cfg.d_model).astype(np.float32).astype(cfg.dtype)
+    x = shard_constraint(x, ("batch", "seq", "embed"))
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    body = _group_fn(cfg)
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable, static_argnums=()
+        )
+
+    def scan_step(carry, group_params):
+        return body(carry, group_params, positions)
+
+    (x, aux), _ = jax.lax.scan(
+        scan_step, (x, jnp.zeros((), jnp.float32)), params["layers"],
+        unroll=cfg.n_groups if cfg.scan_unroll else 1,
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def forward(
+    params: dict, tokens: jax.Array, cfg: LMConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Training/prefill forward. tokens: (B, S) -> (logits (B,S,V), aux)."""
+    x, aux = trunk(params, tokens, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    logits = shard_constraint(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+def loss_fn(params: dict, batch: dict, cfg: LMConfig) -> Tuple[jax.Array, dict]:
+    """batch: {"tokens": (B,S), "labels": (B,S)} -> (loss, metrics).
+
+    The loss head is the fused, seq-chunked unembed+CE (layers.py): the
+    (B, S, V) logits never materialize. Gradient accumulation across
+    microbatches lives in the train step (train/train_step.py), NOT here --
+    accumulating grads inside the scan keeps one microbatch's activations
+    live instead of grad_accum of them."""
+    x, aux = trunk(params, batch["tokens"], cfg)
+    ce = L.chunked_unembed_xent(
+        x, params["unembed"], batch["labels"], cap=cfg.final_softcap,
+        chunk=cfg.xent_chunk,
+    )
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+def prefill_forward(
+    params: dict, tokens: jax.Array, cfg: LMConfig
+) -> Tuple[jax.Array, dict]:
+    """Inference prefill: returns (last-position logits (B, V), per-group
+    stacked KV {pattern_idx: {"k","v": (G, B, Hkv, S, Dh)}}). The KV stack is
+    the prefilled cache handed to the decode loop; only the final position's
+    logits are computed (no full-vocab projection over the prompt)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * np.sqrt(cfg.d_model).astype(np.float32).astype(cfg.dtype)
+    x = shard_constraint(x, ("batch", "seq", "embed"))
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    body = _group_fn(cfg, collect_kv=True)
+
+    def scan_step(carry, group_params):
+        return body(carry, group_params, positions)
+
+    (x, _aux), kvs = jax.lax.scan(
+        scan_step, (x, jnp.zeros((), jnp.float32)), params["layers"],
+        unroll=cfg.n_groups if cfg.scan_unroll else 1,
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:, :], params["unembed"])[:, 0]
+    logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, kvs
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    dtype = dtype or cfg.dtype
+    per_layer = lambda: {
+        "k": jnp.zeros((batch, cfg.n_kv_heads, max_seq, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, cfg.n_kv_heads, max_seq, cfg.head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    return {"layers": [per_layer() for _ in range(cfg.n_layers)]}
+
+
+def abstract_kv_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    dtype = dtype or cfg.dtype
+    kv = jax.ShapeDtypeStruct((batch, cfg.n_kv_heads, max_seq, cfg.head_dim), dtype)
+    per_layer = lambda: {"k": kv, "v": kv, "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    return {"layers": [per_layer() for _ in range(cfg.n_layers)]}
+
+
+def kv_cache_pspecs(cfg: LMConfig, batch: int, max_seq: int, lr=None) -> dict:
+    from repro.distributed.mesh_utils import resolve_pspec
+    from jax.sharding import PartitionSpec as P
+
+    kv = resolve_pspec(
+        ("batch", "kv_heads", "kv_seq", None),
+        (batch, cfg.n_kv_heads, max_seq, cfg.head_dim),
+        lr,
+    )
+    per_layer = lambda: {"k": kv, "v": kv, "pos": P()}
+    return {"layers": [per_layer() for _ in range(cfg.n_layers)]}
+
+
+def serve_step(
+    params: dict, kv_cache: dict, tokens: jax.Array, cfg: LMConfig
+) -> Tuple[jax.Array, dict]:
+    """One decode step: tokens (B, 1) new token ids; returns (logits (B, V),
+    updated cache). Layers are unrolled (no scan) because each layer's cache
+    is threaded; decode HLO is small (S=1)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * np.sqrt(cfg.d_model).astype(np.float32).astype(cfg.dtype)
+    new_layers = []
+    aux_total = jnp.zeros((), jnp.float32)
+    for li in range(cfg.n_layers):
+        g, i = li // cfg.group_size, li % cfg.group_size
+        kind = cfg.pattern[i]
+        lp = jax.tree.map(lambda a: a[g], params["layers"][str(i)])
+        cache = kv_cache["layers"][li]
+        positions = jnp.broadcast_to(cache["pos"] + jnp.arange(S)[None, :], (B, S))
+        x, aux, new_cache = _layer(lp, x, cfg, kind, positions, kv_cache=cache)
+        aux_total = aux_total + aux
+        new_layers.append(new_cache)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:, :], params["unembed"])[:, 0]
+    logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, {"layers": new_layers}

@@ -1,0 +1,10 @@
+"""Optimizers + schedules + gradient compression."""
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.schedule import warmup_cosine
+from repro.optim.grad_compression import (
+    quantize_int8,
+    dequantize_int8,
+    compressed_psum,
+    ErrorFeedbackState,
+)

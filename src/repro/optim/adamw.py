@@ -1,0 +1,100 @@
+"""AdamW (pure-function, pytree-based; no optax dependency).
+
+Optimizer state is kept in fp32 regardless of parameter dtype (bf16 training
+keeps an fp32 master copy in `mu`-free fashion: we store m, v in fp32 and
+cast the update). State sharding mirrors parameter sharding; with the
+default rules the `fsdp` ("data") axis shards whatever parameter dimension
+carries it, giving ZeRO-style state partitioning for free under pjit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+
+
+def adamw_init(params) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(abstract_params) -> dict:
+    s = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(s, abstract_params),
+        "v": jax.tree.map(s, abstract_params),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def opt_state_pspecs(param_specs_tree) -> dict:
+    from jax.sharding import PartitionSpec as P
+
+    return {
+        "m": jax.tree.map(lambda s: s, param_specs_tree),
+        "v": jax.tree.map(lambda s: s, param_specs_tree),
+        "count": P(),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    grads, opt_state: dict, params, cfg: AdamWConfig, lr: Optional[jax.Array] = None
+) -> Tuple[Any, dict, Dict[str, jax.Array]]:
+    """Returns (new_params, new_state, metrics)."""
+    lr = cfg.lr if lr is None else lr
+    count = opt_state["count"] + 1
+    gn = global_norm(grads)
+    if cfg.grad_clip is not None:
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1**c
+    bc2 = 1.0 - b2**c
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    flat_p = jax.tree.leaves(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return (
+        new_p,
+        {"m": new_m, "v": new_v, "count": count},
+        {"grad_norm": gn},
+    )

@@ -1,0 +1,78 @@
+"""Gradient compression for cross-pod all-reduce (int8 + error feedback).
+
+At 512+ chips the inter-pod links are the scarcest bandwidth (DCN or
+long-haul ICI); compressing the gradient all-reduce that crosses the `pod`
+axis 4x (bf16 -> int8 + per-tensor scale) with error-feedback (Seide et al.;
+1-bit Adam lineage) keeps convergence while quartering the dominant
+collective term.
+
+Usage: inside a shard_map over the pod axis,
+    g_sync, ef = compressed_psum(g_local, "pod", ef)
+Error feedback state `ef` (same pytree as grads, fp32) carries the
+quantization residual into the next step.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: object  # pytree matching grads, fp32
+
+
+def init_error_feedback(grads) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        residual=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    )
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(
+    grads,
+    axis_name: str,
+    ef: Optional[ErrorFeedbackState] = None,
+) -> Tuple[object, ErrorFeedbackState]:
+    """Quantized mean-all-reduce over `axis_name` with error feedback.
+
+    int8 payloads cross the axis (psum of int32-accumulated int8 values);
+    scales are psum'd separately (negligible bytes). The residual
+    (x - dequant(quant(x))) is carried to the next call.
+    """
+    if ef is None:
+        ef = init_error_feedback(grads)
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, scale = quantize_int8(x)
+        # accumulate in int32 to avoid int8 overflow across the axis
+        q_sum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        s_sum = jax.lax.psum(scale, axis_name)
+        # each participant used its own scale; approximate with mean scale
+        # (exact per-participant scales would need an all_gather of scalars:
+        # also cheap -- we use psum-mean for simplicity)
+        mean = q_sum.astype(jnp.float32) * (s_sum / n) / n
+        new_r = x - dequantize_int8(q, scale)
+        return mean.astype(g.dtype), new_r
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(ef.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    synced = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    resid = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return synced, ErrorFeedbackState(residual=resid)

@@ -1,0 +1,3 @@
+"""Serving substrate: LM decode, DIN scoring, distributed graph-query serving."""
+
+from repro.serve.graph_serving import GServeConfig, make_distributed_serve_step

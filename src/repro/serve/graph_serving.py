@@ -1,0 +1,211 @@
+"""Distributed gRouting serving step -- the real pjit/shard_map execution path.
+
+This is the paper's cluster (Figure 2) on a TPU mesh:
+
+  router state     : replicated (EMA coords per processor) -- routing math
+                     is O(P*D); the EMA update (Eq. 5) is psum-merged
+  query processors : every device (all mesh axes flattened); each owns a
+                     set-associative LRU cache (repro.core.cache)
+  storage tier     : adjacency rows sharded over "model" (the storage axis),
+                     replicated across "data"/"pod" (independent read
+                     replicas -- scaling the storage tier, paper §4.4);
+                     multi_read = all_to_all over "model" (repro.core.storage)
+
+One serve step:
+  1. each processor runs batched h-hop BFS (Algorithm 5) over its dispatched
+     query batch with its local cache, fetching misses via sharded
+     multi_read;
+  2. EMA router state is updated from the executed queries (Eq. 5) and
+     psum-merged so the (replicated) router sees every processor's mean;
+  3. outputs: per-query neighbor counts + global touched/miss stats (Eq. 8).
+
+Query->processor assignment happens OUTSIDE this step (repro.core.router /
+core.dispatch, with query stealing); the step consumes already-bucketed
+batches, which is how the paper's router/processor split works.
+
+`launch/dryrun.py` lowers this function for the `grouting` cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import cache as cache_lib
+from repro.core.query_engine import EngineConfig, run_neighbor_aggregation
+from repro.core.storage import sharded_multi_read
+
+
+@dataclasses.dataclass(frozen=True)
+class GServeConfig:
+    n_nodes: int  # graph nodes (visited bitmap width)
+    n_rows: int  # storage rows (incl. continuation rows)
+    row_width: int  # padded adjacency width
+    n_storage_shards: int  # == model-axis size
+    queries_per_proc: int  # local query batch per device
+    hops: int = 2
+    max_frontier: int = 256
+    cache_sets: int = 512
+    cache_ways: int = 4
+    read_capacity: int = 4096  # per-(proc, shard) multi_read budget
+    read_retry: int = 4  # bounded re-issue rounds for over-capacity requests
+    chain_depth: int = 64  # max continuation-chain length (ceil(max_true_degree / row_width));
+    #                        the while_loop exits as soon as no row continues, so this is a cap
+    embed_dim: int = 10
+    load_factor: float = 20.0
+    alpha: float = 0.5
+
+
+def _proc_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+
+
+def n_processors(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in _proc_axes(mesh)]))
+
+
+def make_distributed_serve_step(mesh: Mesh, cfg: GServeConfig):
+    """Returns jit'able serve_step(inputs_dict) -> (counts, ema, cache, stats).
+
+    inputs_dict layout == abstract_serve_inputs(mesh, cfg, rows_per_shard).
+    """
+    axes = _proc_axes(mesh)
+    model_ax = "model"
+    n_proc = n_processors(mesh)
+    # sync_axes: the chain while_loop contains all_to_all over the storage
+    # axis, so every participant of that collective group must run the same
+    # trip count -- the loop condition is psum'd over "model".
+    ecfg = EngineConfig(
+        max_frontier=cfg.max_frontier, chain_depth=cfg.chain_depth, sync_axes=(model_ax,)
+    )
+
+    def local_step(queries, rows, deg, cont, owner, loc, coords, ema, *cache_leaves):
+        # locals: queries (1, Q); rows (1, rps, W); cache leaves (1, ...)
+        cache = cache_lib.CacheState(*[c[0] for c in cache_leaves])
+        q = queries[0]
+        def multi_read(ids):
+            # bounded retry: requests dropped by the per-(proc, shard)
+            # capacity are re-issued (all participants run the same fixed
+            # round count, keeping the all_to_all uniform). This is the
+            # router-level retry the RAMCloud client does on RPC overflow.
+            out_rows = jnp.full(ids.shape + (cfg.row_width,), -1, jnp.int32)
+            out_deg = jnp.zeros(ids.shape, jnp.int32)
+            out_cont = jnp.full(ids.shape, -1, jnp.int32)
+            pending = ids
+            for _ in range(cfg.read_retry):
+                r, d, c, served = sharded_multi_read(
+                    pending, rows[0], deg[0], cont[0], owner, loc,
+                    axis_name=model_ax, n_shards=cfg.n_storage_shards,
+                    capacity=cfg.read_capacity,
+                )
+                out_rows = jnp.where(served[:, None], r, out_rows)
+                out_deg = jnp.where(served, d, out_deg)
+                out_cont = jnp.where(served, c, out_cont)
+                pending = jnp.where(served, -1, pending)
+            return out_rows, out_deg, out_cont
+        counts, new_cache, stats = run_neighbor_aggregation(
+            None, cache, q, h=cfg.hops, n=cfg.n_nodes, cfg=ecfg,
+            multi_read=multi_read,
+        )
+        # processor linear index across all mesh axes
+        me = jnp.zeros((), jnp.int32)
+        for a in axes:
+            me = me * mesh.shape[a] + jax.lax.axis_index(a)
+        # Eq. 5: EMA <- alpha*EMA + (1-alpha)*mean(coords of executed queries)
+        qc = coords[jnp.maximum(q, 0)]
+        okq = (q >= 0)[:, None]
+        mean_new = jnp.sum(jnp.where(okq, qc, 0.0), 0) / jnp.maximum(okq.sum(), 1)
+        my_ema = cfg.alpha * ema[me] + (1.0 - cfg.alpha) * mean_new
+        ema_delta = jnp.zeros_like(ema).at[me].set(my_ema - ema[me])
+        new_ema = ema + jax.lax.psum(ema_delta, axes)
+        local_stats = jnp.stack(
+            [stats.touched.astype(jnp.float32), stats.misses.astype(jnp.float32)]
+        )
+        tot_stats = jax.lax.psum(local_stats, axes)
+        new_leaves = tuple(
+            jnp.asarray(l)[None] for l in dataclasses.astuple(new_cache)
+        )
+        return (counts[None], new_ema, tot_stats) + new_leaves
+
+    n_cache_leaves = 8  # CacheState fields
+    proc_p = P(axes)
+    in_specs = (
+        proc_p,  # queries
+        P(model_ax),  # rows: dim0 = storage shard
+        P(model_ax),  # deg
+        P(model_ax),  # cont
+        P(),  # owner
+        P(),  # loc
+        P(),  # coords
+        P(),  # ema
+    ) + (proc_p,) * n_cache_leaves
+    out_specs = (proc_p, P(), P()) + (proc_p,) * n_cache_leaves
+
+    mapped = shard_map(
+        local_step, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+    def serve_step(inputs: dict):
+        cache_leaves = tuple(
+            inputs["cache"][k]
+            for k in ("tags", "age", "data", "deg", "cont", "clock", "hits", "misses")
+        )
+        out = mapped(
+            inputs["queries"], inputs["rows"], inputs["deg"], inputs["cont"],
+            inputs["owner"], inputs["loc"], inputs["coords"], inputs["ema"],
+            *cache_leaves,
+        )
+        counts, ema, stats = out[0], out[1], out[2]
+        new_cache = dict(
+            zip(("tags", "age", "data", "deg", "cont", "clock", "hits", "misses"), out[3:])
+        )
+        return counts, ema, new_cache, stats
+
+    return serve_step
+
+
+def make_processor_caches(mesh: Mesh, cfg: GServeConfig) -> dict:
+    """Stacked per-processor cache states: leaves (n_proc, ...)."""
+    n_proc = n_processors(mesh)
+    one = cache_lib.make_cache(cfg.cache_sets, cfg.cache_ways, cfg.row_width)
+    stacked = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_proc,) + x.shape), one)
+    return {
+        "tags": stacked.tags, "age": stacked.age, "data": stacked.data,
+        "deg": stacked.deg, "cont": stacked.cont, "clock": stacked.clock,
+        "hits": stacked.hits, "misses": stacked.misses,
+    }
+
+
+def abstract_serve_inputs(mesh: Mesh, cfg: GServeConfig, rows_per_shard: int) -> dict:
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    n_proc = n_processors(mesh)
+    S, W = cfg.n_storage_shards, cfg.row_width
+    sds = jax.ShapeDtypeStruct
+    cache = {
+        "tags": sds((n_proc, cfg.cache_sets, cfg.cache_ways), jnp.int32),
+        "age": sds((n_proc, cfg.cache_sets, cfg.cache_ways), jnp.int32),
+        "data": sds((n_proc, cfg.cache_sets, cfg.cache_ways, W), jnp.int32),
+        "deg": sds((n_proc, cfg.cache_sets, cfg.cache_ways), jnp.int32),
+        "cont": sds((n_proc, cfg.cache_sets, cfg.cache_ways), jnp.int32),
+        "clock": sds((n_proc,), jnp.int32),
+        "hits": sds((n_proc,), jnp.int32),
+        "misses": sds((n_proc,), jnp.int32),
+    }
+    return {
+        "queries": sds((n_proc, cfg.queries_per_proc), jnp.int32),
+        "rows": sds((S, rows_per_shard, W), jnp.int32),
+        "deg": sds((S, rows_per_shard), jnp.int32),
+        "cont": sds((S, rows_per_shard), jnp.int32),
+        "owner": sds((cfg.n_rows,), jnp.int32),
+        "loc": sds((cfg.n_rows,), jnp.int32),
+        "coords": sds((cfg.n_nodes, cfg.embed_dim), jnp.float32),
+        "ema": sds((n_proc, cfg.embed_dim), jnp.float32),
+        "cache": cache,
+    }

@@ -1,0 +1,4 @@
+"""Training substrate: step construction + fault-tolerant trainer loop."""
+
+from repro.train.train_step import make_train_step, TrainState
+from repro.train.trainer import Trainer, TrainerConfig

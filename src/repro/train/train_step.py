@@ -1,0 +1,92 @@
+"""Generic train-step construction over (loss_fn, optimizer)."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array  # () int32
+
+
+def init_train_state(params) -> TrainState:
+    return TrainState(params=params, opt_state=adamw_init(params), step=jnp.zeros((), jnp.int32))
+
+
+def accum_value_and_grad(loss_fn: Callable, accum: int):
+    """value_and_grad with gradient accumulation INSIDE a lax.scan: the grad
+    accumulator (fp32, param-shaped) is the scan carry, so peak activation
+    memory is ONE microbatch's, not accum x. (Accumulating outside the scan
+    -- grad of a loss-summing scan -- would save every microbatch's
+    residuals.)"""
+    if accum <= 1:
+        return jax.value_and_grad(loss_fn, has_aux=True)
+
+    def fn(params, batch):
+        sliced = jax.tree.map(
+            lambda v: v.reshape((accum, v.shape[0] // accum) + v.shape[1:]), batch
+        )
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def step(gacc, mb):
+            (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            gacc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32) / accum, gacc, g
+            )
+            return gacc, (loss, metrics)
+
+        grads, (losses, metrics) = jax.lax.scan(step, g0, sliced)
+        metrics = jax.tree.map(jnp.mean, metrics)
+        return (jnp.mean(losses), metrics), grads  # grads stay fp32
+
+    return fn
+
+
+def make_train_step(
+    loss_fn: Callable,  # (params, batch) -> (loss, metrics)
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    donate: bool = True,
+    skip_nonfinite: bool = True,
+    grad_accum: int = 1,
+):
+    """Returns jit'd (state, batch) -> (state, metrics).
+
+    skip_nonfinite: a non-finite global grad norm (hardware fault / overflow)
+    skips the update instead of poisoning the params -- the trainer's
+    first line of fault tolerance.
+    """
+    vg = accum_value_and_grad(loss_fn, grad_accum)
+
+    def step_fn(state: TrainState, batch) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        (loss, metrics), grads = vg(state.params, batch)
+        lr = warmup_cosine(state.step, opt_cfg.lr, warmup, total_steps)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt_state, state.params, opt_cfg, lr=lr
+        )
+        if skip_nonfinite:
+            ok = jnp.isfinite(opt_metrics["grad_norm"]) & jnp.isfinite(loss)
+            new_params = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_params, state.params
+            )
+            new_opt = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_opt, state.opt_state
+            )
+            metrics = dict(metrics, skipped=(~ok).astype(jnp.int32))
+        out = TrainState(params=new_params, opt_state=new_opt, step=state.step + 1)
+        return out, dict(metrics, loss=loss, lr=lr, **opt_metrics)
+
+    return jax.jit(step_fn, donate_argnums=(0,) if donate else ())

@@ -1,0 +1,69 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here -- smoke tests and benches must
+see the host's real (single) device; only launch/dryrun.py forces 512."""
+
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def tiny_graph():
+    from repro.graph.generators import powerlaw_graph
+
+    return powerlaw_graph(n=300, m=4, seed=0)
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    # clustered power-law graph: h-hop balls are O(community), not O(graph),
+    # so topology-aware locality exists at test scale (see generators.py)
+    from repro.graph.generators import community_graph
+
+    return community_graph(n=4800, community_size=60, intra_degree=6,
+                           inter_degree=1.0, seed=1)
+
+
+@pytest.fixture(scope="session")
+def landmark_index(small_graph):
+    from repro.core.landmarks import build_landmark_index
+
+    return build_landmark_index(small_graph, n_processors=4, n_landmarks=24,
+                                min_separation=2)
+
+
+@pytest.fixture(scope="session")
+def graph_embedding(small_graph, landmark_index):
+    from repro.core.embedding import EmbedConfig, build_graph_embedding
+
+    return build_graph_embedding(
+        landmark_index.dist_to_lm, landmark_index.landmarks,
+        EmbedConfig(dim=8, lm_steps=200, node_steps=80),
+    )
+
+
+@pytest.fixture(scope="session")
+def host_mesh():
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (n, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def bfs_oracle(g, source: int, max_hops: int = 10**9):
+    """Plain python BFS level oracle."""
+    import collections
+
+    dist = {source: 0}
+    q = collections.deque([source])
+    while q:
+        u = q.popleft()
+        if dist[u] >= max_hops:
+            continue
+        for v in g.neighbors(u):
+            v = int(v)
+            if v not in dist:
+                dist[v] = dist[u] + 1
+                q.append(v)
+    return dist

@@ -1,0 +1,114 @@
+"""Set-associative LRU cache: exact LRU-within-set semantics vs an
+OrderedDict oracle, batched probe/insert correctness, stats. Property-based
+via hypothesis."""
+
+from collections import OrderedDict
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cache as C
+
+
+def _mk(n_sets=4, n_ways=2, width=4):
+    return C.make_cache(n_sets, n_ways, width)
+
+
+def _set_of(key, n_sets):
+    return int(np.asarray(C._hash_keys(jnp.asarray([key], jnp.int32), n_sets))[0])
+
+
+def test_miss_then_hit_roundtrip():
+    # n_ways covers the worst case of all three keys hashing into one set
+    # (batched inserts into one full set may drop an entry -- documented)
+    state = _mk(n_sets=4, n_ways=4)
+    keys = jnp.asarray([1, 2, 3], jnp.int32)
+    found, rows, degs, conts, state = C.cache_lookup(state, keys)
+    assert not bool(found.any())
+    rows_in = jnp.asarray([[10, 11, -1, -1], [20, -1, -1, -1], [30, 31, 32, -1]], jnp.int32)
+    state = C.cache_insert(state, keys, rows_in, jnp.asarray([2, 1, 3]), jnp.asarray([-1, -1, -1]))
+    found, rows, degs, conts, state = C.cache_lookup(state, keys)
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(rows), np.asarray(rows_in))
+    np.testing.assert_array_equal(np.asarray(degs), [2, 1, 3])
+    assert int(state.hits) == 3 and int(state.misses) == 3
+
+
+def test_insert_overwrites_same_key():
+    state = _mk()
+    k = jnp.asarray([5], jnp.int32)
+    r1 = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    r2 = jnp.asarray([[9, 9, 9, 9]], jnp.int32)
+    state = C.cache_insert(state, k, r1, jnp.asarray([4]), jnp.asarray([-1]))
+    state = C.cache_insert(state, k, r2, jnp.asarray([4]), jnp.asarray([-1]))
+    found, rows, *_ , state = C.cache_lookup(state, k)
+    np.testing.assert_array_equal(np.asarray(rows), np.asarray(r2))
+    # no duplicate entry: the set holds the key once
+    s = _set_of(5, state.n_sets)
+    assert (np.asarray(state.tags[s]) == 5).sum() == 1
+
+
+def test_lru_within_set_eviction():
+    """Fill one set beyond capacity; the least-recently-USED way is evicted."""
+    state = _mk(n_sets=1, n_ways=2, width=1)
+    one = lambda k: (jnp.asarray([k], jnp.int32), jnp.asarray([[k * 10]], jnp.int32),
+                     jnp.asarray([1]), jnp.asarray([-1]))
+    for k in (1, 2):
+        ks, rs, ds, cs = one(k)
+        state = C.cache_insert(state, ks, rs, ds, cs)
+    # touch key 1 -> key 2 becomes LRU
+    f, *_, state = C.cache_lookup(state, jnp.asarray([1], jnp.int32))
+    assert bool(f[0])
+    ks, rs, ds, cs = one(3)
+    state = C.cache_insert(state, ks, rs, ds, cs)
+    f1, *_, state = C.cache_lookup(state, jnp.asarray([1], jnp.int32))
+    f2, *_, state = C.cache_lookup(state, jnp.asarray([2], jnp.int32))
+    f3, *_, state = C.cache_lookup(state, jnp.asarray([3], jnp.int32))
+    assert bool(f1[0]) and not bool(f2[0]) and bool(f3[0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 40), min_size=1, max_size=120))
+def test_lru_matches_oracle_trace(trace):
+    """Sequential access trace: hit/miss pattern must equal a per-set
+    OrderedDict LRU oracle (same #ways per set)."""
+    n_sets, n_ways = 4, 2
+    state = _mk(n_sets, n_ways, 1)
+    oracle = {s: OrderedDict() for s in range(n_sets)}
+    for key in trace:
+        ks = jnp.asarray([key], jnp.int32)
+        found, *_ , state = C.cache_lookup(state, ks)
+        s = _set_of(key, n_sets)
+        o = oracle[s]
+        expect_hit = key in o
+        assert bool(found[0]) == expect_hit, (key, trace)
+        if expect_hit:
+            o.move_to_end(key)
+        else:
+            state = C.cache_insert(
+                state, ks, jnp.asarray([[key]], jnp.int32),
+                jnp.asarray([1]), jnp.asarray([-1]),
+            )
+            o[key] = True
+            if len(o) > n_ways:
+                o.popitem(last=False)
+
+
+def test_invalid_keys_never_hit():
+    state = _mk()
+    keys = jnp.asarray([-1, -1], jnp.int32)
+    found, rows, degs, conts, state = C.cache_lookup(state, keys)
+    assert not bool(found.any())
+    assert int(state.hits) == 0 and int(state.misses) == 0
+
+
+def test_hit_rate():
+    state = _mk()
+    k = jnp.asarray([7], jnp.int32)
+    _, _, _, _, state = C.cache_lookup(state, k)  # miss
+    state = C.cache_insert(state, k, jnp.asarray([[1, -1, -1, -1]], jnp.int32),
+                           jnp.asarray([1]), jnp.asarray([-1]))
+    _, _, _, _, state = C.cache_lookup(state, k)  # hit
+    assert float(C.hit_rate(state)) == pytest.approx(0.5)

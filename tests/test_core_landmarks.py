@@ -1,0 +1,115 @@
+"""Algorithm 1 (landmark preprocessing): BFS correctness, pivot spread,
+O(nP) router table, triangle-inequality bounds, incremental updates."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.landmarks import (
+    UNREACHED, assign_pivots, bfs_distances, build_landmark_index,
+    incremental_add_node, select_landmarks,
+)
+from repro.graph.csr import csr_to_edge_index
+from conftest import bfs_oracle
+
+
+def test_bfs_matches_oracle(tiny_graph):
+    g = tiny_graph
+    src, dst = csr_to_edge_index(g)
+    sources = np.array([0, 5, 17], np.int32)
+    dist = np.asarray(
+        bfs_distances(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(sources), g.n)
+    )
+    for j, s in enumerate(sources):
+        oracle = bfs_oracle(g, int(s))
+        for u in range(g.n):
+            expect = oracle.get(u, int(UNREACHED))
+            assert dist[u, j] == expect, (u, s, dist[u, j], expect)
+
+
+def test_bfs_unreached():
+    # two disconnected dyads
+    src = np.array([0, 1, 2, 3], np.int32)
+    dst = np.array([1, 0, 3, 2], np.int32)
+    d = np.asarray(bfs_distances(jnp.asarray(src), jnp.asarray(dst),
+                                 jnp.asarray(np.array([0], np.int32)), 4))
+    assert d[1, 0] == 1 and d[0, 0] == 0
+    assert d[2, 0] == UNREACHED and d[3, 0] == UNREACHED
+
+
+def test_select_landmarks_degree_and_separation(small_graph):
+    g = small_graph
+    lms, dist = select_landmarks(g, n_landmarks=12, min_separation=2)
+    assert lms.shape == (12,)
+    assert dist.shape == (g.n, 12)
+    assert len(set(lms.tolist())) == 12
+    deg = g.degree()
+    # the top-degree node always survives the separation filter
+    assert np.argmax(deg) in lms
+    # landmarks are self-distance 0
+    for i, l in enumerate(lms):
+        assert dist[l, i] == 0
+
+
+def test_pivots_far_and_one_per_processor(landmark_index):
+    li = landmark_index
+    P = li.dist_to_proc.shape[1]
+    assert len(set(li.pivots.tolist())) == min(P, len(li.landmarks))
+    # pivot landmarks are assigned to distinct processors 0..P-1
+    procs = li.lm_processor[li.pivots]
+    assert sorted(procs.tolist()) == list(range(len(li.pivots)))
+    # first two pivots are the farthest landmark pair
+    dmat = li.dist_to_lm[li.landmarks, :].astype(np.int64)
+    dmat = np.minimum(dmat, dmat.T)
+    capped = np.where(dmat >= UNREACHED, -1, dmat)
+    best = capped.max()
+    got = capped[li.pivots[0], li.pivots[1]]
+    assert got == best
+
+
+def test_dist_to_proc_is_min_over_assigned(landmark_index):
+    li = landmark_index
+    P = li.dist_to_proc.shape[1]
+    n = li.dist_to_lm.shape[0]
+    rng = np.random.default_rng(0)
+    for u in rng.integers(0, n, 50):
+        for p in range(P):
+            mask = li.lm_processor == p
+            expect = li.dist_to_lm[u, mask].min() if mask.any() else UNREACHED
+            assert li.dist_to_proc[u, p] == expect
+
+
+def test_landmark_triangle_bounds(small_graph, landmark_index):
+    """Paper Eq. 1-2: |d(u,l)-d(l,v)| <= d(u,v) <= d(u,l)+d(l,v)."""
+    g, li = small_graph, landmark_index
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        u, v = int(rng.integers(0, g.n)), int(rng.integers(0, g.n))
+        oracle = bfs_oracle(g, u)
+        if v not in oracle:
+            continue
+        duv = oracle[v]
+        dl_u = li.dist_to_lm[u].astype(np.int64)
+        dl_v = li.dist_to_lm[v].astype(np.int64)
+        ok = (dl_u < UNREACHED) & (dl_v < UNREACHED)
+        assert np.all(duv <= dl_u[ok] + dl_v[ok])
+        assert np.all(np.abs(dl_u[ok] - dl_v[ok]) <= duv)
+
+
+def test_router_storage_is_linear(landmark_index):
+    """Requirement 1: router state O(nP), not O(n^2)."""
+    li = landmark_index
+    n, P = li.dist_to_proc.shape
+    assert li.dist_to_proc.nbytes == n * P * 4
+
+
+def test_incremental_add_node(small_graph, landmark_index):
+    g, li = small_graph, landmark_index
+    u = 42
+    li2 = incremental_add_node(li, g, u)
+    # recomputed distances equal full preprocessing for that node
+    assert np.array_equal(li2.dist_to_lm[u], li.dist_to_lm[u])
+    assert np.array_equal(li2.dist_to_proc[u], li.dist_to_proc[u])
+    # everything else untouched
+    mask = np.ones(g.n, bool); mask[u] = False
+    assert np.array_equal(li2.dist_to_lm[mask], li.dist_to_lm[mask])

@@ -1,0 +1,84 @@
+"""Capacity dispatch (shared gRouting/MoE primitive): capacity respected,
+best-score preference, stealing to next-best, drop semantics."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dispatch import capacity_dispatch, gather_by_dispatch, scatter_back
+
+
+def test_respects_capacity_and_prefers_best():
+    scores = jnp.asarray(np.array([
+        [0.0, 1.0],
+        [0.0, 1.0],
+        [0.0, 1.0],
+        [1.0, 0.0],
+    ], np.float32))
+    d = capacity_dispatch(scores, capacity=2, n_rounds=2)
+    counts = np.asarray(d.counts)
+    assert counts[0] <= 2 and counts[1] <= 2
+    a = np.asarray(d.assignment)
+    assert (a >= 0).all()  # total capacity 4 >= 4 items with 2 rounds
+    assert a[3] == 1  # item 3 prefers dest 1 and gets it
+
+
+def test_stealing_to_next_best():
+    # 3 items all prefer dest 0 (cap 1); two must steal to dest 1
+    scores = jnp.asarray(np.array([[0.0, 1.0]] * 3, np.float32))
+    d = capacity_dispatch(scores, capacity=2, n_rounds=2)
+    a = np.asarray(d.assignment)
+    assert (a >= 0).all()
+    assert (a == 0).sum() == 2 and (a == 1).sum() == 1
+
+
+def test_drop_when_capacity_exhausted():
+    scores = jnp.asarray(np.zeros((5, 1), np.float32))
+    d = capacity_dispatch(scores, capacity=2, n_rounds=3)
+    a = np.asarray(d.assignment)
+    assert (a == 0).sum() == 2 and (a == -1).sum() == 3
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 24), st.integers(1, 5), st.integers(1, 8), st.integers(0, 10**6))
+def test_dispatch_invariants(T, P, cap, seed):
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.random((T, P)).astype(np.float32))
+    d = capacity_dispatch(scores, capacity=cap, n_rounds=2)
+    a, pos, counts = np.asarray(d.assignment), np.asarray(d.position), np.asarray(d.counts)
+    # capacity respected
+    assert (counts <= cap).all()
+    # assigned items have unique (dest, position), position < capacity
+    pairs = set()
+    for i in range(T):
+        if a[i] >= 0:
+            assert 0 <= pos[i] < cap
+            assert (a[i], pos[i]) not in pairs
+            pairs.add((a[i], pos[i]))
+        else:
+            assert pos[i] == -1
+    # counts match assignments
+    np.testing.assert_array_equal(counts, np.bincount(a[a >= 0], minlength=P))
+    # if total capacity >= T, two rounds may still drop items when an item's
+    # two best choices fill up -- but with P*cap >= T and n_rounds >= P every
+    # item lands; check the strong case
+    if P * cap >= T and P <= 2:
+        d2 = capacity_dispatch(scores, capacity=cap, n_rounds=P)
+        assert (np.asarray(d2.assignment) >= 0).all()
+
+
+def test_gather_scatter_roundtrip():
+    rng = np.random.default_rng(0)
+    T, P, cap = 10, 3, 4
+    scores = jnp.asarray(rng.random((T, P)).astype(np.float32))
+    d = capacity_dispatch(scores, capacity=cap, n_rounds=3)
+    x = jnp.asarray(rng.standard_normal((T, 5)).astype(np.float32))
+    buf = gather_by_dispatch(x, d, P, cap)
+    back = scatter_back(buf, d, T)
+    a = np.asarray(d.assignment)
+    for i in range(T):
+        if a[i] >= 0:
+            np.testing.assert_allclose(np.asarray(back[i]), np.asarray(x[i]))
+        else:
+            assert (np.asarray(back[i]) == 0).all()

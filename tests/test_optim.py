@@ -1,0 +1,60 @@
+"""Optimizer substrate: AdamW math vs a numpy reference, clipping, schedule,
+int8 quantization bounds."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.schedule import warmup_cosine
+from repro.optim.grad_compression import dequantize_int8, quantize_int8
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01,
+                      grad_clip=None)
+    rng = np.random.default_rng(0)
+    p = rng.standard_normal((5, 3)).astype(np.float32)
+    params = {"w": jnp.asarray(p)}
+    state = adamw_init(params)
+    m = np.zeros_like(p); v = np.zeros_like(p); pp = p.copy()
+    for t in range(1, 4):
+        g = rng.standard_normal((5, 3)).astype(np.float32)
+        params, state, _ = adamw_update({"w": jnp.asarray(g)}, state, params, cfg)
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1 - 0.9**t); vh = v / (1 - 0.999**t)
+        pp = pp - 1e-2 * (mh / (np.sqrt(vh) + 1e-8) + 0.01 * pp)
+        np.testing.assert_allclose(np.asarray(params["w"]), pp, atol=1e-5)
+
+
+def test_grad_clip():
+    cfg = AdamWConfig(grad_clip=1.0)
+    params = {"w": jnp.zeros((4,))}
+    state = adamw_init(params)
+    big = {"w": jnp.full((4,), 100.0)}
+    _, _, metrics = adamw_update(big, state, params, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_warmup_cosine_shape():
+    lr = [float(warmup_cosine(s, 1.0, 10, 100)) for s in range(100)]
+    assert lr[0] == 0.0
+    assert lr[9] == pytest.approx(0.9)
+    assert max(lr) == pytest.approx(1.0, abs=0.02)
+    assert lr[99] >= 0.1 - 1e-6  # min_frac floor
+    assert all(a >= b - 1e-9 for a, b in zip(lr[10:], lr[11:]))  # decays
+
+
+def test_quantize_roundtrip_bound():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((128,)).astype(np.float32) * 5)
+    q, scale = quantize_int8(x)
+    back = dequantize_int8(q, scale)
+    assert float(jnp.abs(back - x).max()) <= float(scale) / 2 + 1e-7
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)

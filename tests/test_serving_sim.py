@@ -1,0 +1,119 @@
+"""Event-driven serving simulator: the paper's qualitative claims at test
+scale -- smart routing beats baselines on hotspot workloads, caching beats
+no-cache, query stealing balances load, storage scaling saturates."""
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import CoupledSystemModel, ETHERNET, INFINIBAND
+from repro.core.serving import (
+    BallCache, LRUCache, ServingSimulator, SimRouter, SimRouterConfig,
+    run_coupled_baseline,
+)
+from repro.core.workloads import (
+    concentrated_workload, hotspot_workload, uniform_workload,
+)
+from repro.graph.partition import hash_partition
+
+
+@pytest.fixture(scope="module")
+def cluster(small_graph, landmark_index, graph_embedding):
+    balls = BallCache(small_graph)
+
+    def run(scheme, wl, P=4, cache_entries=400, h=3, steal=True, margin=4.0):
+        rt = SimRouter(P, SimRouterConfig(scheme=scheme, steal_margin=margin),
+                       landmark_index=landmark_index, embedding=graph_embedding)
+        sim = ServingSimulator(small_graph, P, rt, cache_entries=cache_entries,
+                               h=h, use_cache=(scheme != "no_cache"),
+                               ball_cache=balls, steal=steal)
+        return sim.run(wl)
+
+    return run
+
+
+def test_caching_beats_no_cache_on_hotspots(cluster, small_graph):
+    wl = hotspot_workload(small_graph, r=2, n_hotspots=30, seed=2)
+    base = cluster("no_cache", wl)
+    hsh = cluster("hash", wl)
+    assert hsh.mean_response_ms < base.mean_response_ms
+    assert hsh.hit_rate > 0.2
+
+
+def test_smart_routing_beats_baselines_on_hotspots(cluster, small_graph):
+    """Paper Fig 17: landmark/embed achieve more cache hits than next-ready/
+    hash under constrained per-processor cache."""
+    wl = hotspot_workload(small_graph, r=2, n_hotspots=30, seed=3)
+    res = {s: cluster(s, wl, cache_entries=400) for s in
+           ("next_ready", "hash", "landmark", "embed")}
+    smart = max(res["landmark"].hit_rate, res["embed"].hit_rate)
+    naive = max(res["next_ready"].hit_rate, res["hash"].hit_rate)
+    assert smart > naive, {k: v.hit_rate for k, v in res.items()}
+
+
+def test_uniform_workload_cache_neutral(cluster, small_graph):
+    """Paper Fig 20: uniform random queries gain little from caching."""
+    wl = uniform_workload(small_graph, n_queries=300, seed=4)
+    hot = hotspot_workload(small_graph, r=1, n_hotspots=30, seed=4)
+    uni = cluster("embed", wl, cache_entries=400)
+    hsp = cluster("embed", hot, cache_entries=400)
+    assert uni.hit_rate < 0.6  # genuinely low, not just relatively
+    assert uni.hit_rate < hsp.hit_rate
+
+
+def test_concentrated_hotspot_all_schemes_cache_well(cluster, small_graph):
+    """Paper Fig 19: repeated identical queries make even hash routing hit."""
+    wl = concentrated_workload(small_graph, n_hotspots=25, reps=10, seed=5)
+    h = cluster("hash", wl)
+    assert h.hit_rate > 0.7
+
+
+def test_query_stealing_balances_skew(cluster, small_graph):
+    """All queries on one node: with stealing the work spreads; without, a
+    single processor serves everything (hash affinity)."""
+    wl = concentrated_workload(small_graph, n_hotspots=1, reps=60, seed=6)
+    # huge steal_margin disables the router's dispatch-time soft steal so the
+    # contrast isolates execution-time idle stealing
+    steal = cluster("hash", wl, steal=True, margin=1e9)
+    no_steal = cluster("hash", wl, steal=False, margin=1e9)
+    assert steal.per_proc_queries.max() < 60
+    assert no_steal.per_proc_queries.max() == 60
+    assert steal.makespan_s <= no_steal.makespan_s + 1e-9
+
+
+def test_linear_scaling_with_processors(cluster, small_graph):
+    """Paper Fig 9: embed routing throughput grows with processors."""
+    wl = hotspot_workload(small_graph, r=2, n_hotspots=40, seed=7)
+    t2 = cluster("embed", wl, P=2).throughput_qps
+    t6 = cluster("embed", wl, P=6).throughput_qps
+    assert t6 > 1.5 * t2, (t2, t6)
+
+
+def test_coupled_baseline_slower(cluster, small_graph):
+    """Paper Fig 8: the partition-coupled BSP baseline is much slower than
+    decoupled gRouting (supersteps dominate)."""
+    wl = hotspot_workload(small_graph, r=2, n_hotspots=30, seed=8)
+    labels = hash_partition(small_graph.n, 4)
+    coupled = run_coupled_baseline(small_graph, wl, labels, n_workers=4)
+    ours = cluster("embed", wl)
+    assert ours.throughput_qps > 3 * coupled.throughput_qps
+
+
+def test_ethernet_slower_than_infiniband(small_graph, landmark_index, graph_embedding):
+    wl = hotspot_workload(small_graph, r=2, n_hotspots=20, seed=9)
+    balls = BallCache(small_graph)
+    out = {}
+    for name, cm in (("ib", INFINIBAND), ("eth", ETHERNET)):
+        rt = SimRouter(4, SimRouterConfig(scheme="embed"),
+                       landmark_index=landmark_index, embedding=graph_embedding)
+        sim = ServingSimulator(small_graph, 4, rt, cache_entries=400, h=3,
+                               ball_cache=balls, cost=cm)
+        out[name] = sim.run(wl)
+    assert out["eth"].mean_response_ms > out["ib"].mean_response_ms
+
+
+def test_lru_cache_reference():
+    c = LRUCache(2)
+    assert not c.access(1) and not c.access(2)
+    assert c.access(1)          # 1 most recent
+    assert not c.access(3)      # evicts 2
+    assert not c.access(2) and c.access(3)

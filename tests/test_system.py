@@ -1,0 +1,146 @@
+"""End-to-end system behaviour: full gRouting pipeline (preprocess -> route
+-> execute on the device path), reduced end-to-end training for one arch per
+family, hypothesis property tests on graph substrate invariants."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.graph.csr import build_csr, csr_to_edge_index, make_bidirected, to_padded
+from repro.graph.generators import powerlaw_graph
+from repro.graph.partition import edge_cut, hash_partition, label_propagation_partition
+
+
+# ---------------------------------------------------------------------------
+# graph substrate properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 40), st.integers(0, 120), st.integers(0, 10**6))
+def test_csr_roundtrip_property(n, e, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    g = build_csr(n, src, dst, dedup=True)
+    g.validate()
+    # every input edge present exactly once
+    want = {(int(s), int(d)) for s, d in zip(src, dst)}
+    got = set()
+    for u in range(n):
+        for v in g.neighbors(u):
+            got.add((u, int(v)))
+    assert got == want
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 30), st.integers(1, 60), st.integers(0, 10**6))
+def test_bidirected_symmetric(n, e, seed):
+    rng = np.random.default_rng(seed)
+    g = make_bidirected(build_csr(n, rng.integers(0, n, e), rng.integers(0, n, e)))
+    nbrs = {u: set(g.neighbors(u).tolist()) for u in range(n)}
+    for u in range(n):
+        for v in nbrs[u]:
+            assert u in nbrs[v]
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 10**6))
+def test_padded_roundtrip_property(max_deg, seed):
+    g = powerlaw_graph(n=100, m=4, seed=seed % 100)
+    adj = to_padded(g, max_degree=max_deg)
+    for u in range(0, g.n, 9):
+        np.testing.assert_array_equal(
+            np.sort(adj.full_neighbors(u)), np.sort(g.neighbors(u)))
+
+
+def test_hash_partition_balanced():
+    labels = hash_partition(100_000, 16)
+    counts = np.bincount(labels, minlength=16)
+    assert counts.min() > 0.9 * 100_000 / 16
+
+
+def test_label_propagation_cuts_fewer_edges(small_graph):
+    h = hash_partition(small_graph.n, 4)
+    lp = label_propagation_partition(small_graph, 4, n_iters=5)
+    assert edge_cut(small_graph, lp) < edge_cut(small_graph, h)
+    counts = np.bincount(lp, minlength=4)
+    assert counts.max() <= 1.15 * small_graph.n / 4  # balance cap respected
+
+
+# ---------------------------------------------------------------------------
+# full gRouting pipeline on the device path
+# ---------------------------------------------------------------------------
+
+
+def test_grouting_end_to_end_device_path(small_graph, landmark_index, graph_embedding):
+    """Preprocess -> smart-route a hotspot burst -> execute on the jit'd
+    serving step -> hit rate improves across bursts (the paper's core loop)."""
+    from repro.core.router import Router, RouterConfig
+    from repro.core.storage import build_storage, make_serving_storage
+    from repro.core.workloads import hotspot_workload
+    from repro.serve.graph_serving import (
+        GServeConfig, make_distributed_serve_step, make_processor_caches,
+    )
+
+    g = small_graph
+    adj = to_padded(g, max_degree=16)
+    tier = build_storage(adj, n_shards=1)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    qpp = 16
+    cfg = GServeConfig(
+        n_nodes=g.n, n_rows=adj.n_rows, row_width=adj.max_degree,
+        n_storage_shards=1, queries_per_proc=qpp, hops=2, max_frontier=512,
+        cache_sets=1024, cache_ways=4, read_capacity=2048, chain_depth=8,
+    )
+    step = jax.jit(make_distributed_serve_step(mesh, cfg))
+    store = make_serving_storage(tier)
+    caches = make_processor_caches(mesh, cfg)
+
+    router = Router(1, RouterConfig(scheme="embed"), embedding=graph_embedding)
+    rstate = router.init_state()
+    wl = hotspot_workload(g, r=1, n_hotspots=8, queries_per_hotspot=qpp, seed=0)
+
+    D = graph_embedding.coords.shape[1]
+    inputs = {
+        "rows": store["rows"], "deg": store["deg"], "cont": store["cont"],
+        "owner": store["owner"], "loc": store["loc"],
+        "coords": jnp.asarray(graph_embedding.coords),
+        "ema": jnp.zeros((1, D), jnp.float32),
+        "cache": caches,
+    }
+    miss_rates = []
+    with mesh:
+        for burst in range(2):  # same workload twice: cache warms up
+            for i in range(0, wl.query_nodes.size, qpp):
+                q = wl.query_nodes[i : i + qpp]
+                rstate, assign = router.route_batch(rstate, jnp.asarray(q))
+                counts, ema, cache, stats = step(
+                    dict(inputs, queries=jnp.asarray(q[None, :])))
+                inputs["cache"] = cache
+                inputs["ema"] = ema
+            s = np.asarray(stats)
+            miss_rates.append(float(s[1]) / max(float(s[0]), 1))
+    assert miss_rates[-1] < miss_rates[0]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end reduced training, one arch per family (the launch.train path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "pna", "din"])
+def test_launch_train_smoke(arch, tmp_path):
+    from repro.launch.train import build_smoke_training
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    loss_fn, init_fn, batch_fn = build_smoke_training(arch, batch=4, seq=32)
+    t = Trainer(loss_fn, init_fn, batch_fn,
+                TrainerConfig(total_steps=6, ckpt_every=3,
+                              ckpt_dir=str(tmp_path / arch), log_every=100))
+    state = t.run()
+    assert int(state.step) == 6
+    assert all(np.isfinite(h["loss"]) for h in t.history)
