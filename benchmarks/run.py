@@ -15,6 +15,7 @@ import time
 import traceback
 
 BENCHES = [
+    ("engine_e2e", "benchmarks.bench_engine"),
     ("fig8_throughput", "benchmarks.bench_throughput"),
     ("fig9_10_scalability", "benchmarks.bench_scalability"),
     ("fig11_cache", "benchmarks.bench_cache"),

@@ -47,8 +47,9 @@ def main():
     ge = build_graph_embedding(li.dist_to_lm, li.landmarks,
                                EmbedConfig(dim=8, lm_steps=200, node_steps=80))
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_auto_mesh
+
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
     qpp = 32
     cfg = GServeConfig(
         n_nodes=g.n, n_rows=adj.n_rows, row_width=adj.max_degree,
@@ -80,7 +81,7 @@ def main():
             counts, ema, cache, stats = step(
                 dict(inputs, queries=jnp.asarray(q[None, :])))
             inputs["cache"], inputs["ema"] = cache, ema
-            touched, missed = np.asarray(stats)  # per-burst totals
+            touched, missed, _reads = np.asarray(stats)  # per-burst totals
             hit = 100 * (1 - missed / max(touched, 1))
             print(f"{b:5d} {qpp:8d} {int(touched):8d} {int(missed):8d} {hit:6.1f}")
     print("\nhit rate climbs as the processor cache captures the hotspots --")

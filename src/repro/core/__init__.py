@@ -37,6 +37,8 @@ from repro.core.workloads import (
     hotspot_workload,
     concentrated_workload,
     uniform_workload,
+    drifting_hotspot_workload,
+    antilocality_workload,
 )
 from repro.core.costmodel import CostModel, INFINIBAND, ETHERNET
 from repro.core.serving import (
@@ -79,6 +81,8 @@ __all__ = [
     "hotspot_workload",
     "concentrated_workload",
     "uniform_workload",
+    "drifting_hotspot_workload",
+    "antilocality_workload",
     "CostModel",
     "INFINIBAND",
     "ETHERNET",

@@ -166,21 +166,19 @@ def cache_insert(
     rank = jnp.zeros((B,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
     way = jnp.where(present, match_way, (lru_way + rank) % state.n_ways)
 
-    sets_w = jnp.where(valid, sets, 0)
-    way_w = jnp.where(valid, way, 0)
-    tag_val = jnp.where(valid, keys, state.tags[sets_w, way_w])
-    age_val = jnp.where(valid, state.clock + 1, state.age[sets_w, way_w])
-    deg_val = jnp.where(valid, degs, state.deg[sets_w, way_w])
-    cont_val = jnp.where(valid, conts, state.cont[sets_w, way_w])
-    data_val = jnp.where(valid[:, None], rows, state.data[sets_w, way_w])
+    # invalid entries scatter to an out-of-bounds set and are dropped; they
+    # must never be clamped to a real slot or they would overwrite genuine
+    # inserts landing there earlier in the batch (last scatter wins).
+    sets_w = jnp.where(valid, sets, state.n_sets)
+    age_val = jnp.full((B,), state.clock + 1, state.age.dtype)
 
     return dataclasses.replace(
         state,
-        tags=state.tags.at[sets_w, way_w].set(tag_val, mode="drop"),
-        age=state.age.at[sets_w, way_w].set(age_val, mode="drop"),
-        deg=state.deg.at[sets_w, way_w].set(deg_val, mode="drop"),
-        cont=state.cont.at[sets_w, way_w].set(cont_val, mode="drop"),
-        data=state.data.at[sets_w, way_w].set(data_val, mode="drop"),
+        tags=state.tags.at[sets_w, way].set(keys, mode="drop"),
+        age=state.age.at[sets_w, way].set(age_val, mode="drop"),
+        deg=state.deg.at[sets_w, way].set(degs, mode="drop"),
+        cont=state.cont.at[sets_w, way].set(conts, mode="drop"),
+        data=state.data.at[sets_w, way].set(rows, mode="drop"),
         clock=state.clock + 1,
     )
 

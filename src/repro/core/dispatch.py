@@ -62,7 +62,10 @@ def capacity_dispatch(
     for _ in range(n_rounds):
         unassigned = assignment < 0
         choice = jnp.argmin(masked, axis=1).astype(jnp.int32)  # (T,)
-        cand = jnp.where(unassigned, choice, P)  # sentinel P = "no request"
+        # rows with no finite destination left (all +inf) never request:
+        # without this guard argmin's arbitrary 0 would be assigned.
+        has_choice = jnp.isfinite(jnp.min(masked, axis=1))
+        cand = jnp.where(unassigned & has_choice, choice, P)  # sentinel P = "no request"
         rank = _rank_within(cand, P + 1)
         free = capacity - used  # (P,)
         cand_safe = jnp.minimum(cand, P - 1)
@@ -87,13 +90,16 @@ def capacity_dispatch(
 
 
 def gather_by_dispatch(
-    x: jax.Array, d: DispatchResult, P: int, capacity: int
+    x: jax.Array, d: DispatchResult, P: int, capacity: int, fill_value=0
 ) -> jax.Array:
-    """Scatter items (T, ...) into a (P, capacity, ...) buffer by assignment."""
+    """Scatter items (T, ...) into a (P, capacity, ...) buffer by assignment.
+
+    Unfilled slots hold `fill_value` (use -1 when scattering ids whose
+    consumers treat negatives as padding)."""
     ok = d.assignment >= 0
     dest = jnp.where(ok, d.assignment, P)
     pos = jnp.where(ok, d.position, 0)
-    buf = jnp.zeros((P, capacity) + x.shape[1:], x.dtype)
+    buf = jnp.full((P, capacity) + x.shape[1:], fill_value, x.dtype)
     return buf.at[dest, pos].set(x, mode="drop")
 
 

@@ -55,8 +55,29 @@ class HopResult(NamedTuple):
     frontier: jax.Array  # (B, F) int32
     cache: CacheState
     truncated: jax.Array  # (B,) bool -- frontier overflow happened
-    reads: jax.Array  # () int32 -- storage rows fetched (cache misses)
+    reads: jax.Array  # () int32 -- unique storage rows fetched
     touched: jax.Array  # () int32 -- rows needed (hits + misses)
+    probe_misses: jax.Array  # () int32 -- missed cache probes (incl. batch dups)
+
+
+def _dedup_first(ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Intra-batch duplicate detection for read combining.
+
+    ids: (M,) int32. Returns (first (M,) bool -- entry is the first
+    occurrence of its value; src (M,) int32 -- index of that first
+    occurrence, identity for first occurrences).
+    """
+    M = ids.shape[0]
+    if M == 0:
+        return jnp.zeros((0,), bool), jnp.zeros((0,), jnp.int32)
+    order = jnp.argsort(ids, stable=True)
+    s = ids[order]
+    is_first_s = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    head_pos_s = jax.lax.cummax(jnp.where(is_first_s, jnp.arange(M), 0))
+    first_idx_s = order[head_pos_s]
+    first = jnp.zeros((M,), bool).at[order].set(is_first_s)
+    src = jnp.zeros((M,), jnp.int32).at[order].set(first_idx_s.astype(jnp.int32))
+    return first, src
 
 
 def _read_rows(
@@ -65,30 +86,51 @@ def _read_rows(
     ids: jax.Array,
     use_cache: bool,
     multi_read: Callable,
-) -> Tuple[jax.Array, jax.Array, jax.Array, CacheState, jax.Array, jax.Array]:
-    """Cache-first row read: probe, fetch misses from storage, insert.
+) -> Tuple[jax.Array, jax.Array, jax.Array, CacheState, jax.Array, jax.Array, jax.Array]:
+    """Cache-first row read with intra-batch read combining.
 
-    ids: (M,) int32 (-1 padded). Returns (rows, deg, cont, cache', n_miss, n_touch).
+    ids: (M,) int32 (-1 padded). A row id requested more than once in the
+    same batch is fetched from storage ONCE (RAMCloud's multi_read dedups
+    its request set) and inserted into the cache once; later duplicates are
+    served from the first fetch -- exactly the behaviour of a sequential
+    engine, where the first access inserts and the rest hit. This also keeps
+    duplicate keys from landing in multiple ways of one set (cache_insert
+    requires deduped keys).
+
+    Returns (rows, deg, cont, cache', n_probe_miss, n_reads, n_touch):
+    n_probe_miss counts missed probes (consistent with the cache's own hit/
+    miss counters); n_reads counts unique rows actually fetched from storage.
     """
     valid = ids >= 0
     n_touch = jnp.sum(valid).astype(jnp.int32)
     if not use_cache:
-        rows, deg, cont = multi_read(ids)
-        return rows, deg, cont, cache_state, n_touch, n_touch
+        # read combining is a multi_read property, not a cache one: fetch
+        # unique rows only; every probe still counts as a miss (no cache).
+        first, src = _dedup_first(jnp.where(valid, ids, -1))
+        uniq = valid & first
+        rows, deg, cont = multi_read(jnp.where(uniq, ids, -1))
+        rows, deg, cont = rows[src], deg[src], cont[src]
+        n_reads = jnp.sum(uniq).astype(jnp.int32)
+        return rows, deg, cont, cache_state, n_touch, n_reads, n_touch
     found, c_rows, c_deg, c_cont, cache_state = cache_lib.cache_lookup(
         cache_state, ids, valid
     )
     miss = valid & ~found
-    miss_ids = jnp.where(miss, ids, -1)
-    s_rows, s_deg, s_cont = multi_read(miss_ids)
+    first, src = _dedup_first(jnp.where(miss, ids, -1))
+    uniq = miss & first
+    fetch_ids = jnp.where(uniq, ids, -1)
+    s_rows, s_deg, s_cont = multi_read(fetch_ids)
+    # duplicates of a missed id read the first occurrence's fetched row
+    s_rows, s_deg, s_cont = s_rows[src], s_deg[src], s_cont[src]
     cache_state = cache_lib.cache_insert(
-        cache_state, miss_ids, s_rows, s_deg, s_cont, valid=miss
+        cache_state, fetch_ids, s_rows, s_deg, s_cont, valid=uniq
     )
     rows = jnp.where(found[:, None], c_rows, s_rows)
     deg = jnp.where(found, c_deg, s_deg)
     cont = jnp.where(found, c_cont, s_cont)
-    n_miss = jnp.sum(miss).astype(jnp.int32)
-    return rows, deg, cont, cache_state, n_miss, n_touch
+    n_probe_miss = jnp.sum(miss).astype(jnp.int32)
+    n_reads = jnp.sum(uniq).astype(jnp.int32)
+    return rows, deg, cont, cache_state, n_probe_miss, n_reads, n_touch
 
 
 def expand_hop(
@@ -112,12 +154,13 @@ def expand_hop(
         return flag
 
     def chain_body(state):
-        ids, new_mask, cache_state, reads_total, touch_total, it, _go = state
-        rows, deg, cont, cache_state, n_miss, n_touch = _read_rows(
+        ids, new_mask, cache_state, reads_total, touch_total, probe_total, it, _go = state
+        rows, deg, cont, cache_state, n_probe_miss, n_reads, n_touch = _read_rows(
             tier_arrays, cache_state, ids, cfg.use_cache, multi_read
         )
-        reads_total = reads_total + n_miss
+        reads_total = reads_total + n_reads
         touch_total = touch_total + n_touch
+        probe_total = probe_total + n_probe_miss
         rows_b = rows.reshape(B, F, W)
         deg_b = deg.reshape(B, F)
         width_ok = jnp.arange(W)[None, None, :] < deg_b[:, :, None]
@@ -131,7 +174,7 @@ def expand_hop(
         # are drained in the same hop, as in Algorithm 5's per-hop multi_read
         cont_flat = cont.reshape(-1)
         go = _global_any(jnp.any(cont_flat >= 0))
-        return cont_flat, new_mask, cache_state, reads_total, touch_total, it + 1, go
+        return cont_flat, new_mask, cache_state, reads_total, touch_total, probe_total, it + 1, go
 
     def chain_cond(state):
         *_rest, it, go = state
@@ -145,11 +188,12 @@ def expand_hop(
         jnp.zeros((), jnp.int32),
         jnp.zeros((), jnp.int32),
         jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int32),
         _global_any(jnp.any(frontier_flat >= 0)),
     )
-    _ids, new_mask, cache_state, reads_total, touch_total, _it, _go = jax.lax.while_loop(
-        chain_cond, chain_body, init
-    )
+    (
+        _ids, new_mask, cache_state, reads_total, touch_total, probe_total, _it, _go
+    ) = jax.lax.while_loop(chain_cond, chain_body, init)
 
     newly = new_mask & ~visited
     visited = visited | new_mask
@@ -159,17 +203,25 @@ def expand_hop(
     # truncated if the frontier overflowed F, OR the continuation chain was
     # cut off by the chain_depth cap while rows still had continuations
     truncated = (n_new > F) | _go
-    return HopResult(visited, nxt, cache_state, truncated, reads_total, touch_total)
+    return HopResult(visited, nxt, cache_state, truncated, reads_total, touch_total,
+                     probe_total)
 
 
 @dataclasses.dataclass
 class QueryStats:
-    """Per-batch execution statistics (feeds the cost model / Eq. 8 metrics)."""
+    """Per-batch execution statistics (feeds the cost model / Eq. 8 metrics).
+
+    `misses` counts missed cache probes (consistent with the CacheState hit/
+    miss counters, so duplicates within one batched probe each count);
+    `reads` counts unique rows actually fetched from storage after intra-
+    batch read combining -- the true storage read volume.
+    """
 
     touched: jax.Array  # rows needed across hops (hits+misses)
-    misses: jax.Array  # storage reads
+    misses: jax.Array  # missed cache probes
     result_sizes: jax.Array  # (B,) |N_h(q)|
     truncated: jax.Array  # (B,) bool
+    reads: jax.Array  # unique storage rows fetched
 
 
 def run_neighbor_aggregation(
@@ -180,10 +232,16 @@ def run_neighbor_aggregation(
     n: int,
     cfg: EngineConfig,
     multi_read: Callable,
-) -> Tuple[jax.Array, CacheState, QueryStats]:
+    touched_map: Optional[jax.Array] = None,
+):
     """h-hop Neighbor Aggregation: count nodes within h hops of each query.
 
-    queries: (B,) int32. Returns (counts (B,), cache', stats).
+    queries: (B,) int32. Returns (counts (B,), cache', stats, touched_map').
+    When `touched_map` (an (n,) bool bitmap) is given, the frontier's node
+    rows are accumulated into it before each hop (continuation rows >= n
+    are engine-internal and not tracked) -- the cache-touch-set accounting
+    the engine/simulator differential oracle compares; otherwise the fourth
+    value is None.
     """
     B = queries.shape[0]
     F = cfg.max_frontier
@@ -194,21 +252,28 @@ def run_neighbor_aggregation(
     frontier = frontier.at[:, 0].set(jnp.where(valid_q, queries, -1))
 
     misses = jnp.zeros((), jnp.int32)
+    reads = jnp.zeros((), jnp.int32)
     touched = jnp.zeros((), jnp.int32)
     truncated = jnp.zeros((B,), bool)
     # hops is static (h small, 1..4) -> unrolled python loop keeps HLO simple
     for _ in range(h):
+        if touched_map is not None:
+            ids = frontier.reshape(-1)
+            ok = (ids >= 0) & (ids < n)
+            touched_map = touched_map.at[jnp.where(ok, ids, 0)].max(ok)
         res = expand_hop(tier_arrays, cache_state, visited, frontier, cfg, multi_read, n)
         visited, frontier, cache_state = res.visited, res.frontier, res.cache
-        misses = misses + res.reads
+        misses = misses + res.probe_misses
+        reads = reads + res.reads
         touched = touched + res.touched
         truncated = truncated | res.truncated
 
     counts = jnp.sum(visited, axis=1) - valid_q.astype(jnp.int32)  # exclude query node
     stats = QueryStats(
-        touched=touched, misses=misses, result_sizes=jnp.sum(visited, 1), truncated=truncated
+        touched=touched, misses=misses, result_sizes=jnp.sum(visited, 1),
+        truncated=truncated, reads=reads,
     )
-    return counts, cache_state, stats
+    return counts, cache_state, stats, touched_map
 
 
 def run_random_walk(
@@ -226,13 +291,14 @@ def run_random_walk(
     B = queries.shape[0]
     cur = queries
     misses = jnp.zeros((), jnp.int32)
+    reads = jnp.zeros((), jnp.int32)
     touched = jnp.zeros((), jnp.int32)
     for step in range(h):
         key, k1, k2 = jax.random.split(key, 3)
-        rows, deg, cont, cache_state, n_miss, n_touch = _read_rows(
+        rows, deg, cont, cache_state, n_miss, n_reads, n_touch = _read_rows(
             tier_arrays, cache_state, cur, cfg.use_cache, multi_read
         )
-        misses, touched = misses + n_miss, touched + n_touch
+        misses, reads, touched = misses + n_miss, reads + n_reads, touched + n_touch
         # uniform neighbor choice over the first row (paper treats the value
         # array as the neighbor set; continuation tail neighbors are reached
         # on later steps through the chain row ids themselves)
@@ -247,6 +313,7 @@ def run_random_walk(
         misses=misses,
         result_sizes=jnp.ones((B,), jnp.int32) * (h + 1),
         truncated=jnp.zeros((B,), bool),
+        reads=reads,
     )
     return cur, cache_state, stats
 
@@ -276,22 +343,25 @@ def run_reachability(
         frontier = jnp.full((B, F), -1, jnp.int32)
         frontier = frontier.at[:, 0].set(jnp.where(vq, starts, -1))
         m = jnp.zeros((), jnp.int32)
+        r = jnp.zeros((), jnp.int32)
         t = jnp.zeros((), jnp.int32)
         tr = jnp.zeros((B,), bool)
         for _ in range(hops):
             res = expand_hop(tier_arrays, cache_state, visited, frontier, cfg, multi_read, n)
             visited, frontier, cache_state = res.visited, res.frontier, res.cache
-            m, t, tr = m + res.reads, t + res.touched, tr | res.truncated
-        return visited, cache_state, m, t, tr
+            m, r, t, tr = (m + res.probe_misses, r + res.reads,
+                           t + res.touched, tr | res.truncated)
+        return visited, cache_state, m, r, t, tr
 
-    vis_f, cache_state, m1, t1, tr1 = bfs(sources, h_fwd, cache_state)
-    vis_b, cache_state, m2, t2, tr2 = bfs(targets, h_bwd, cache_state)
+    vis_f, cache_state, m1, r1, t1, tr1 = bfs(sources, h_fwd, cache_state)
+    vis_b, cache_state, m2, r2, t2, tr2 = bfs(targets, h_bwd, cache_state)
     reachable = jnp.any(vis_f & vis_b, axis=1)
     stats = QueryStats(
         touched=t1 + t2,
         misses=m1 + m2,
         result_sizes=jnp.sum(vis_f | vis_b, 1),
         truncated=tr1 | tr2,
+        reads=r1 + r2,
     )
     return reachable, cache_state, stats
 

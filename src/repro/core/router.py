@@ -141,12 +141,16 @@ class Router:
     @functools.partial(jax.jit, static_argnames=("self",))
     def route_batch(self, state: RouterState, queries: jax.Array) -> Tuple[RouterState, jax.Array]:
         """Assign a batch of queries sequentially (paper's router is a single
-        thread dispatching one query at a time). queries: (B,) int32.
-        Returns (state', assignment (B,) int32)."""
+        thread dispatching one query at a time). queries: (B,) int32; negative
+        entries are padding -- they get assignment -1 and leave the router
+        state (load, EMA, rr) untouched, so fixed-shape round batches can be
+        padded freely. Returns (state', assignment (B,) int32)."""
 
         def step(st, q):
-            st, p = self._decide_one(st, q)
-            return st, p
+            st2, p = self._decide_one(st, jnp.maximum(q, 0))
+            ok = q >= 0
+            st3 = jax.tree.map(lambda new, old: jnp.where(ok, new, old), st2, st)
+            return st3, jnp.where(ok, p, -1)
 
         return jax.lax.scan(step, state, queries)
 

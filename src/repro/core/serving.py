@@ -165,6 +165,10 @@ class SimResult:
     per_proc_queries: np.ndarray
     makespan_s: float
     stolen: int
+    # differential-oracle accounting (None for the coupled baseline):
+    per_proc_hits: Optional[np.ndarray] = None  # (P,) int64
+    per_proc_misses: Optional[np.ndarray] = None  # (P,) int64 == storage reads
+    touched_sets: Optional[List[set]] = None  # per-proc set of rows read
 
     def row(self) -> str:
         return (
@@ -221,20 +225,43 @@ class ServingSimulator:
         self.balls = ball_cache or BallCache(g)
         self.steal = steal
 
-    def run(self, wl: Workload, h: Optional[int] = None) -> SimResult:
+    def run(
+        self,
+        wl: Workload,
+        h: Optional[int] = None,
+        assignments: Optional[np.ndarray] = None,
+    ) -> SimResult:
+        """Serve the workload. When `assignments` is given (one processor id
+        per query) the router is bypassed and the simulator executes exactly
+        that placement -- idle stealing is forced off for the run so the
+        injected placement is preserved verbatim. This is the hook the
+        engine/simulator differential oracle uses to compare the two
+        execution paths under an identical route."""
         h = h or self.h
         P = self.P
+        steal = self.steal and assignments is None
         caches = [LRUCache(self.cache_entries if self.use_cache else 0) for _ in range(P)]
         queues: List[List[int]] = [[] for _ in range(P)]  # pending query indices
         load = np.zeros(P, dtype=np.float64)
 
         # --- dispatch phase: router assigns the burst (ack-driven queues) ---
         assign = np.zeros(wl.query_nodes.size, dtype=np.int32)
-        for i, q in enumerate(wl.query_nodes):
-            p = self.router.route(int(q), load)
-            assign[i] = p
-            queues[p].append(i)
-            load[p] += 1.0
+        if assignments is not None:
+            assign[:] = np.asarray(assignments, np.int32)
+            assert (assign >= 0).all() and (assign < P).all(), (
+                "injected assignments must place every query on a real "
+                "processor (engine runs with unplaced queries cannot be "
+                "replayed)"
+            )
+            for i, p in enumerate(assign):
+                queues[int(p)].append(i)
+                load[int(p)] += 1.0
+        else:
+            for i, q in enumerate(wl.query_nodes):
+                p = self.router.route(int(q), load)
+                assign[i] = p
+                queues[p].append(i)
+                load[p] += 1.0
 
         # --- execution phase: event-driven with steal-on-idle ---------------
         #    (time, proc) processor-free events
@@ -247,10 +274,13 @@ class ServingSimulator:
         done = 0
         makespan = 0.0
         per_proc = np.zeros(P, dtype=np.int64)
+        per_hits = np.zeros(P, dtype=np.int64)
+        per_miss = np.zeros(P, dtype=np.int64)
+        touched_sets: List[set] = [set() for _ in range(P)]
         while done < wl.query_nodes.size:
             t, p = heapq.heappop(events)
             if not queues[p]:
-                if not self.steal:
+                if not steal:
                     continue
                 # steal from the longest queue (tail = farthest-future query)
                 victim = int(np.argmax([len(qq) for qq in queues]))
@@ -278,6 +308,9 @@ class ServingSimulator:
                 st = self.cost.no_cache_time_s(touched.size, rounds)
             hits += q_hits
             misses += q_miss
+            per_hits[p] += q_hits
+            per_miss[p] += q_miss
+            touched_sets[p].update(int(u) for u in touched)
             resp[i] = st
             per_proc[p] += 1
             load[p] -= 1.0
@@ -299,6 +332,9 @@ class ServingSimulator:
             per_proc_queries=per_proc,
             makespan_s=float(makespan),
             stolen=stolen,
+            per_proc_hits=per_hits,
+            per_proc_misses=per_miss,
+            touched_sets=touched_sets,
         )
 
 

@@ -1,6 +1,6 @@
 """Online query workload generators (paper §4.2, Figure 7).
 
-Three categories, each a stream of query nodes (+ a uniform mixture of the
+Five categories, each a stream of query nodes (+ a uniform mixture of the
 three query types):
 
   - r-hop hotspot:    100 hotspot centers uniform at random; 10 query nodes
@@ -8,11 +8,18 @@ three query types):
                       hotspot are consecutive. (r = 1, 2 in the paper)
   - concentrated:     r = 0 -- each center queried 10 times consecutively.
   - uniform:          1000 uniform query nodes.
+  - drifting hotspot: hotspot centers random-walk between phases -- the
+                      locality a smart router must track ONLINE (EMA drift).
+  - anti-locality:    adversarial stream of distinct nodes with consecutive
+                      queries maximally separated -- the no-reuse worst case
+                      where caching cannot help and routing must fall back
+                      to pure load balance.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -89,6 +96,75 @@ def hotspot_workload(
 
 def concentrated_workload(g: CSRGraph, n_hotspots: int = 100, reps: int = 10, seed: int = 0):
     return hotspot_workload(g, r=0, n_hotspots=n_hotspots, queries_per_hotspot=reps, seed=seed)
+
+
+def drifting_hotspot_workload(
+    g: CSRGraph,
+    n_phases: int = 4,
+    n_hotspots: int = 16,
+    queries_per_hotspot: int = 6,
+    r: int = 1,
+    drift_hops: int = 2,
+    seed: int = 0,
+) -> Workload:
+    """Hotspot centers random-walk `drift_hops` steps between phases.
+
+    Within a phase this is the ordinary r-hop hotspot stream; across phases
+    every hotspot's center moves, so a router that memorized the initial
+    placement decays while an EMA-tracking router follows the drift."""
+    rng = np.random.default_rng(seed)
+    centers = rng.integers(0, g.n, size=n_hotspots).astype(np.int64)
+    nodes: List[np.ndarray] = []
+    hs: List[np.ndarray] = []
+    for _phase in range(n_phases):
+        for i in range(n_hotspots):
+            c = int(centers[i])
+            qs = (
+                np.full(queries_per_hotspot, c, dtype=np.int64)
+                if r == 0
+                else _ball_sample(g, c, r, queries_per_hotspot, rng)
+            )
+            nodes.append(qs)
+            hs.append(np.full(queries_per_hotspot, i, dtype=np.int32))
+        for i in range(n_hotspots):
+            c = int(centers[i])
+            for _ in range(drift_hops):
+                nb = g.neighbors(c)
+                if nb.size:
+                    c = int(nb[rng.integers(nb.size)])
+            centers[i] = c
+    qn = np.concatenate(nodes).astype(np.int32)
+    types, targets = _mix_types(qn.size, rng, rng.integers(0, g.n, qn.size).astype(np.int32))
+    return Workload(
+        name="drifting-hotspot",
+        query_nodes=qn,
+        query_types=types,
+        targets=targets,
+        hotspot_id=np.concatenate(hs),
+    )
+
+
+def antilocality_workload(g: CSRGraph, n_queries: int = 256, seed: int = 0) -> Workload:
+    """Adversarial anti-locality stream: distinct query nodes, consecutive
+    queries maximally separated in node-id space. Generators lay communities
+    out in contiguous id ranges, so a large id-stride (coprime with n, hence
+    a full permutation cycle) destroys both temporal reuse (no node repeats)
+    and topological reuse (consecutive balls live in different communities)."""
+    rng = np.random.default_rng(seed)
+    n_queries = min(n_queries, g.n)
+    stride = max(g.n // 2 - 1, 1)
+    while stride > 1 and math.gcd(stride, g.n) != 1:
+        stride -= 1
+    start = int(rng.integers(g.n))
+    qn = ((start + np.arange(n_queries, dtype=np.int64) * stride) % g.n).astype(np.int32)
+    types, targets = _mix_types(qn.size, rng, rng.integers(0, g.n, qn.size).astype(np.int32))
+    return Workload(
+        name="anti-locality",
+        query_nodes=qn,
+        query_types=types,
+        targets=targets,
+        hotspot_id=np.full(qn.size, -1, np.int32),
+    )
 
 
 def uniform_workload(g: CSRGraph, n_queries: int = 1000, seed: int = 0) -> Workload:

@@ -9,6 +9,17 @@ from __future__ import annotations
 import jax
 
 
+def make_auto_mesh(shape, axes):
+    """jax.make_mesh with explicit Auto axis types where the installed JAX
+    supports them; plain mesh otherwise (jax.sharding.AxisType landed after
+    0.4.37, where every axis is Auto implicitly)."""
+    try:
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    except AttributeError:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 (2 pods, 512 chips).
 
@@ -16,16 +27,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     in-pod data/FSDP axis, "model" = tensor/expert/storage axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_auto_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Whatever this host actually has (tests/examples); model-axis last."""
     n = len(jax.devices())
     assert n % model == 0, (n, model)
-    return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_auto_mesh((n // model, model), ("data", "model"))

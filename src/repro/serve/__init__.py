@@ -1,3 +1,11 @@
 """Serving substrate: LM decode, DIN scoring, distributed graph-query serving."""
 
+from repro.serve.engine import (
+    EngineResult,
+    EngineRunConfig,
+    ServingEngine,
+    ema_round_update,
+    make_retrying_multi_read,
+    processor_round,
+)
 from repro.serve.graph_serving import GServeConfig, make_distributed_serve_step

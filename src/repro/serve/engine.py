@@ -1,0 +1,384 @@
+"""Unified jit-compiled serving engine: the full gRouting loop as one scan.
+
+`ServingEngine` pushes a whole multi-hop query workload through a single
+jit-compiled `lax.scan` over serving rounds. Each round is the paper's
+entire router -> processor -> storage pipeline, end to end:
+
+  1. `Router.route_batch`   -- sequential smart routing (Algorithms 2/4),
+                               padded queries masked out;
+  2. `capacity_dispatch`    -- bounded per-round processor queues; overflow
+                               beyond a processor's slots is HARD query
+                               stealing to the next-best (least-loaded)
+                               processor (paper Requirement 2);
+  3. `processor_round`      -- vmapped over processors: each expands its
+                               queries' h-hop balls via `expand_hop`, i.e.
+                               set-associative `cache_lookup`/`cache_insert`
+                               with batched storage `multi_read` for misses;
+  4. ack                    -- router load decremented by served counts;
+                               per-round QueryStats (hit rate, storage
+                               reads, load imbalance) accumulate in-carry.
+
+`processor_round` IS the serving step: the distributed path
+(`repro.serve.graph_serving`) wraps the very same function in `shard_map`
+with `sharded_multi_read` over the storage axis, so the single-host engine
+and the mesh path cannot drift apart. `tests/test_engine_parity.py`
+additionally replays identical workloads through this engine and the
+event-driven `ServingSimulator` (plain-LRU OrderedDict caches, scalar BFS)
+and asserts matching cache-touch sets, per-processor loads, and storage
+read volumes -- the differential oracle for every later scaling PR.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as cache_lib
+from repro.core.cache import CacheState
+from repro.core.dispatch import capacity_dispatch, gather_by_dispatch, scatter_back
+from repro.core.query_engine import (
+    EngineConfig, QueryStats, run_neighbor_aggregation,
+)
+from repro.core.router import Router, RouterState
+from repro.core.storage import StorageTier, multi_read_ref, sharded_multi_read
+from repro.core.workloads import Workload
+
+
+# ---------------------------------------------------------------------------
+# The per-processor serving step (shared: ServingEngine vmap + shard_map path)
+# ---------------------------------------------------------------------------
+
+
+def processor_round(
+    cache: CacheState,
+    queries: jax.Array,
+    *,
+    h: int,
+    n: int,
+    ecfg: EngineConfig,
+    multi_read: Callable,
+    touched_map: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, CacheState, QueryStats, Optional[jax.Array]]:
+    """One processor serves its dispatched query batch (h-hop aggregation).
+
+    queries: (B,) int32, -1 padded. touched_map: optional (n,) bool bitmap
+    of node rows this processor has ever read (for the differential oracle).
+    Returns (counts (B,), cache', stats, touched_map').
+
+    This is a naming shim over `run_neighbor_aggregation` -- the ONE
+    implementation of the per-processor serving step, shared by the
+    single-host engine (vmapped) and the shard_map device path.
+    """
+    return run_neighbor_aggregation(
+        None, cache, queries, h=h, n=n, cfg=ecfg, multi_read=multi_read,
+        touched_map=touched_map,
+    )
+
+
+def ema_round_update(
+    ema: jax.Array, me: jax.Array, coords: jax.Array, queries: jax.Array, alpha: float
+) -> jax.Array:
+    """Eq. 5 applied once per round over the executed batch's mean coords.
+
+    Returns processor `me`'s new EMA row; the caller merges it into the
+    replicated (P, D) table (psum-delta on the mesh path)."""
+    qc = coords[jnp.maximum(queries, 0)]
+    okq = (queries >= 0)[:, None]
+    mean_new = jnp.sum(jnp.where(okq, qc, 0.0), 0) / jnp.maximum(okq.sum(), 1)
+    return alpha * ema[me] + (1.0 - alpha) * mean_new
+
+
+def make_retrying_multi_read(
+    local_rows: jax.Array,
+    local_deg: jax.Array,
+    local_cont: jax.Array,
+    owner_lut: jax.Array,
+    loc_lut: jax.Array,
+    *,
+    axis_name: str,
+    n_shards: int,
+    capacity: int,
+    row_width: int,
+    retries: int,
+) -> Callable:
+    """Bounded-retry sharded multi_read (call INSIDE shard_map).
+
+    Requests dropped by the per-(proc, shard) capacity are re-issued; all
+    participants run the same fixed round count, keeping the all_to_all
+    uniform. This is the router-level retry the RAMCloud client does on RPC
+    overflow."""
+
+    def multi_read(ids: jax.Array):
+        out_rows = jnp.full(ids.shape + (row_width,), -1, jnp.int32)
+        out_deg = jnp.zeros(ids.shape, jnp.int32)
+        out_cont = jnp.full(ids.shape, -1, jnp.int32)
+        pending = ids
+        for _ in range(retries):
+            r, d, c, served = sharded_multi_read(
+                pending, local_rows, local_deg, local_cont, owner_lut, loc_lut,
+                axis_name=axis_name, n_shards=n_shards, capacity=capacity,
+            )
+            out_rows = jnp.where(served[:, None], r, out_rows)
+            out_deg = jnp.where(served, d, out_deg)
+            out_cont = jnp.where(served, c, out_cont)
+            pending = jnp.where(served, -1, pending)
+        return out_rows, out_deg, out_cont
+
+    return multi_read
+
+
+# ---------------------------------------------------------------------------
+# The end-to-end engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineRunConfig:
+    n_processors: int
+    round_size: int = 32  # B: queries routed per serving round
+    capacity: int = 0  # C: per-processor slots per round (0 -> round_size)
+    hops: int = 2
+    max_frontier: int = 256
+    cache_sets: int = 512
+    cache_ways: int = 4
+    chain_depth: int = 8
+    steal_rounds: int = 0  # dispatch passes (0 -> n_processors)
+    use_cache: bool = True
+    # carry per-processor touch bitmaps (n bools each) for differential
+    # oracles; opt-in -- it costs O(P * n) scan-carry memory
+    track_touched: bool = False
+
+    @property
+    def slot_capacity(self) -> int:
+        return self.capacity if self.capacity > 0 else self.round_size
+
+    @property
+    def dispatch_rounds(self) -> int:
+        return self.steal_rounds if self.steal_rounds > 0 else self.n_processors
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """Host-side summary of one ServingEngine.run (all numpy)."""
+
+    scheme: str
+    n_queries: int
+    counts: np.ndarray  # (Q,) per-query |N_h(q)| - 1; -1 = unplaced (check
+    #                     `unplaced` before trusting sums)
+    assignment: np.ndarray  # (Q,) executed processor per query (post-steal)
+    router_assignment: np.ndarray  # (Q,) the router's pre-steal choice
+    per_proc_queries: np.ndarray  # (P,)
+    per_proc_touched: np.ndarray  # (P,)
+    per_proc_reads: np.ndarray  # (P,) unique storage rows fetched
+    touched: int
+    reads: int
+    probe_misses: int
+    stolen: int
+    unplaced: int
+    truncated: bool
+    hit_rate: float  # (touched - reads) / touched, the sequential-equivalent rate
+    load_imbalance: float  # max/mean of per_proc_queries
+    wall_s: float
+    throughput_qps: float
+    touched_bitmap: Optional[np.ndarray]  # (P, n) bool rows this proc read
+    per_round: dict  # per-round arrays: touched, reads, stolen, per_proc, ...
+
+    def touch_sets(self):
+        assert self.touched_bitmap is not None, "run with track_touched=True"
+        return [set(np.nonzero(row)[0].tolist()) for row in self.touched_bitmap]
+
+    def row(self) -> str:
+        return (
+            f"{self.scheme:>10s}  qps={self.throughput_qps:9.1f}  "
+            f"hit={self.hit_rate:6.3f}  reads={self.reads}  "
+            f"imb={self.load_imbalance:5.2f}  stolen={self.stolen}"
+        )
+
+
+class ServingEngine:
+    """Single-host end-to-end engine over decoupled storage.
+
+    Storage access defaults to the single-device reference `multi_read`
+    (identical dataflow to the sharded all_to_all path; see
+    repro.core.storage); pass `multi_read` to substitute e.g. a
+    capacity-limited or fault-injecting reader.
+    """
+
+    def __init__(
+        self,
+        tier: StorageTier,
+        router: Router,
+        cfg: EngineRunConfig,
+        multi_read: Optional[Callable] = None,
+    ):
+        assert cfg.slot_capacity * cfg.n_processors >= cfg.round_size, (
+            "round cannot fit: capacity * P < round_size"
+        )
+        assert router.P == cfg.n_processors, (router.P, cfg.n_processors)
+        self.tier = tier
+        self.router = router
+        self.cfg = cfg
+        self.n = tier.n
+        self._multi_read = multi_read or (lambda ids: multi_read_ref(tier, ids))
+        self._ecfg = EngineConfig(
+            max_frontier=cfg.max_frontier,
+            chain_depth=cfg.chain_depth,
+            use_cache=cfg.use_cache,
+        )
+        self._run_jit = jax.jit(self._run_scan)
+
+    # -- state ---------------------------------------------------------------
+
+    def init_caches(self) -> CacheState:
+        """Stacked per-processor caches: every leaf gains a leading (P,) axis."""
+        one = cache_lib.make_cache(
+            self.cfg.cache_sets, self.cfg.cache_ways, self.tier.row_width
+        )
+        P = self.cfg.n_processors
+        return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (P,) + x.shape), one)
+
+    def init_touched(self) -> Optional[jax.Array]:
+        if not self.cfg.track_touched:
+            return None
+        return jnp.zeros((self.cfg.n_processors, self.n), dtype=bool)
+
+    # -- jit body ------------------------------------------------------------
+
+    def _proc_round(self, cache, queries, touched_map):
+        counts, cache, stats, touched_map = processor_round(
+            cache,
+            queries,
+            h=self.cfg.hops,
+            n=self.n,
+            ecfg=self._ecfg,
+            multi_read=self._multi_read,
+            touched_map=touched_map,
+        )
+        scalars = (
+            stats.touched,
+            stats.reads,
+            stats.misses,
+            jnp.any(stats.truncated),
+        )
+        return counts, cache, scalars, touched_map
+
+    def _round_body(self, carry, qs):
+        cfg = self.cfg
+        P, C = cfg.n_processors, cfg.slot_capacity
+        rstate, caches, tmap = carry
+
+        # 1. smart routing (sequential scan; -1 padding masked)
+        rstate, r_assign = self.router.route_batch(rstate, qs)
+        valid = qs >= 0
+
+        # 2. bounded dispatch with hard stealing: the router's pick costs 0,
+        #    every other processor 1 + its current load (so overflow flows to
+        #    the idlest). Padded queries get all-inf rows and stay unassigned.
+        onehot = jnp.arange(P)[None, :] == r_assign[:, None]
+        load_term = rstate.load[None, :] / cfg_load_factor(self.router)
+        scores = jnp.where(onehot, 0.0, 1.0 + load_term)
+        scores = jnp.where(valid[:, None], scores, jnp.inf)
+        d = capacity_dispatch(scores, capacity=C, n_rounds=cfg.dispatch_rounds)
+        qbuf = gather_by_dispatch(qs, d, P, C, fill_value=-1)
+
+        # 3. every processor serves its slice (vmapped shared step; a None
+        #    touch bitmap is an empty pytree and passes through vmap freely)
+        counts_b, caches, scal, tmap = jax.vmap(self._proc_round)(caches, qbuf, tmap)
+        touched_p, reads_p, probe_p, trunc_p = scal
+        counts = scatter_back(counts_b, d, qs.shape[0])
+        # unplaced (and padded) queries must not masquerade as |N_h(q)|-1 == 0
+        counts = jnp.where(d.assignment >= 0, counts, -1)
+
+        # 4. ack: completed queries leave the router's queues. The decrement
+        #    targets the ROUTER-chosen processor -- that is where route_batch
+        #    incremented load -- not the executor, so stolen (and dropped)
+        #    queries don't leak load onto their preferred processor. (The
+        #    simulator's steal does load[victim] -= 1 likewise.)
+        routed = jnp.bincount(
+            jnp.where(valid, r_assign, P), length=P + 1
+        )[:P].astype(jnp.float32)
+        rstate = dataclasses.replace(rstate, load=rstate.load - routed)
+        served = d.counts  # executed per processor (post-steal)
+        stolen = jnp.sum(valid & (d.assignment >= 0) & (d.assignment != r_assign))
+        unplaced = jnp.sum(valid & (d.assignment < 0))
+
+        ys = {
+            "counts": counts,
+            "assignment": d.assignment,
+            "router_assignment": r_assign,
+            "per_proc": served,
+            "touched": touched_p,
+            "reads": reads_p,
+            "probe_misses": probe_p,
+            "truncated": trunc_p,
+            "stolen": stolen,
+            "unplaced": unplaced,
+        }
+        return (rstate, caches, tmap), ys
+
+    def _run_scan(self, rstate, caches, tmap, qrounds):
+        return jax.lax.scan(self._round_body, (rstate, caches, tmap), qrounds)
+
+    # -- host entry ----------------------------------------------------------
+
+    def run(self, wl: Workload, state=None) -> Tuple[EngineResult, tuple]:
+        """Serve a workload; returns (result, final (rstate, caches, tmap)).
+
+        Pass the returned state back in to serve a follow-up burst against
+        warm caches (the paper's repeated-burst experiments)."""
+        cfg = self.cfg
+        Q = int(wl.query_nodes.size)
+        B = cfg.round_size
+        R = -(-Q // B)
+        padded = np.full(R * B, -1, np.int32)
+        padded[:Q] = wl.query_nodes
+        qrounds = jnp.asarray(padded.reshape(R, B))
+
+        if state is None:
+            state = (self.router.init_state(), self.init_caches(), self.init_touched())
+        t0 = time.perf_counter()
+        carry, ys = self._run_jit(*state, qrounds)
+        jax.block_until_ready(ys["counts"])
+        wall = time.perf_counter() - t0
+
+        counts = np.asarray(ys["counts"]).reshape(-1)[:Q]
+        assign = np.asarray(ys["assignment"]).reshape(-1)[:Q]
+        r_assign = np.asarray(ys["router_assignment"]).reshape(-1)[:Q]
+        per_proc = np.asarray(ys["per_proc"]).sum(0)
+        touched_p = np.asarray(ys["touched"]).sum(0)
+        reads_p = np.asarray(ys["reads"]).sum(0)
+        touched = int(touched_p.sum())
+        reads = int(reads_p.sum())
+        tmap = carry[2]
+        result = EngineResult(
+            scheme=self.router.scheme,
+            n_queries=Q,
+            counts=counts,
+            assignment=assign,
+            router_assignment=r_assign,
+            per_proc_queries=per_proc,
+            per_proc_touched=touched_p,
+            per_proc_reads=reads_p,
+            touched=touched,
+            reads=reads,
+            probe_misses=int(np.asarray(ys["probe_misses"]).sum()),
+            stolen=int(np.asarray(ys["stolen"]).sum()),
+            unplaced=int(np.asarray(ys["unplaced"]).sum()),
+            truncated=bool(np.asarray(ys["truncated"]).any()),
+            hit_rate=float((touched - reads) / touched) if touched else 0.0,
+            load_imbalance=float(per_proc.max() / max(per_proc.mean(), 1e-9)),
+            wall_s=wall,
+            throughput_qps=Q / max(wall, 1e-9),
+            touched_bitmap=None if tmap is None else np.asarray(tmap),
+            per_round={k: np.asarray(v) for k, v in ys.items()},
+        )
+        return result, carry
+
+
+def cfg_load_factor(router: Router) -> float:
+    return float(router.config.load_factor)

@@ -1,6 +1,13 @@
 """Distributed gRouting serving step -- the real pjit/shard_map execution path.
 
-This is the paper's cluster (Figure 2) on a TPU mesh:
+This is a THIN mesh wrapper over the unified engine step
+(`repro.serve.engine.processor_round`): the per-processor serving logic --
+h-hop BFS with set-associative cache + storage multi_read, stats, EMA --
+lives in engine.py and is shared verbatim with the single-host
+`ServingEngine`; this module only contributes the mesh concerns (shard_map
+specs, the sharded all_to_all multi_read binding, psum merges).
+
+The paper's cluster (Figure 2) on a TPU mesh:
 
   router state     : replicated (EMA coords per processor) -- routing math
                      is O(P*D); the EMA update (Eq. 5) is psum-merged
@@ -12,12 +19,12 @@ This is the paper's cluster (Figure 2) on a TPU mesh:
                      multi_read = all_to_all over "model" (repro.core.storage)
 
 One serve step:
-  1. each processor runs batched h-hop BFS (Algorithm 5) over its dispatched
-     query batch with its local cache, fetching misses via sharded
-     multi_read;
+  1. each processor runs the shared engine step over its dispatched query
+     batch with its local cache, fetching misses via sharded multi_read;
   2. EMA router state is updated from the executed queries (Eq. 5) and
      psum-merged so the (replicated) router sees every processor's mean;
-  3. outputs: per-query neighbor counts + global touched/miss stats (Eq. 8).
+  3. outputs: per-query neighbor counts + global [touched, probe-misses,
+     storage-reads] stats (Eq. 8).
 
 Query->processor assignment happens OUTSIDE this step (repro.core.router /
 core.dispatch, with query stealing); the step consumes already-bucketed
@@ -39,8 +46,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import cache as cache_lib
-from repro.core.query_engine import EngineConfig, run_neighbor_aggregation
-from repro.core.storage import sharded_multi_read
+from repro.core.query_engine import EngineConfig
+from repro.serve.engine import (
+    ema_round_update, make_retrying_multi_read, processor_round,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,28 +99,14 @@ def make_distributed_serve_step(mesh: Mesh, cfg: GServeConfig):
         # locals: queries (1, Q); rows (1, rps, W); cache leaves (1, ...)
         cache = cache_lib.CacheState(*[c[0] for c in cache_leaves])
         q = queries[0]
-        def multi_read(ids):
-            # bounded retry: requests dropped by the per-(proc, shard)
-            # capacity are re-issued (all participants run the same fixed
-            # round count, keeping the all_to_all uniform). This is the
-            # router-level retry the RAMCloud client does on RPC overflow.
-            out_rows = jnp.full(ids.shape + (cfg.row_width,), -1, jnp.int32)
-            out_deg = jnp.zeros(ids.shape, jnp.int32)
-            out_cont = jnp.full(ids.shape, -1, jnp.int32)
-            pending = ids
-            for _ in range(cfg.read_retry):
-                r, d, c, served = sharded_multi_read(
-                    pending, rows[0], deg[0], cont[0], owner, loc,
-                    axis_name=model_ax, n_shards=cfg.n_storage_shards,
-                    capacity=cfg.read_capacity,
-                )
-                out_rows = jnp.where(served[:, None], r, out_rows)
-                out_deg = jnp.where(served, d, out_deg)
-                out_cont = jnp.where(served, c, out_cont)
-                pending = jnp.where(served, -1, pending)
-            return out_rows, out_deg, out_cont
-        counts, new_cache, stats = run_neighbor_aggregation(
-            None, cache, q, h=cfg.hops, n=cfg.n_nodes, cfg=ecfg,
+        multi_read = make_retrying_multi_read(
+            rows[0], deg[0], cont[0], owner, loc,
+            axis_name=model_ax, n_shards=cfg.n_storage_shards,
+            capacity=cfg.read_capacity, row_width=cfg.row_width,
+            retries=cfg.read_retry,
+        )
+        counts, new_cache, stats, _ = processor_round(
+            cache, q, h=cfg.hops, n=cfg.n_nodes, ecfg=ecfg,
             multi_read=multi_read,
         )
         # processor linear index across all mesh axes
@@ -119,15 +114,14 @@ def make_distributed_serve_step(mesh: Mesh, cfg: GServeConfig):
         for a in axes:
             me = me * mesh.shape[a] + jax.lax.axis_index(a)
         # Eq. 5: EMA <- alpha*EMA + (1-alpha)*mean(coords of executed queries)
-        qc = coords[jnp.maximum(q, 0)]
-        okq = (q >= 0)[:, None]
-        mean_new = jnp.sum(jnp.where(okq, qc, 0.0), 0) / jnp.maximum(okq.sum(), 1)
-        my_ema = cfg.alpha * ema[me] + (1.0 - cfg.alpha) * mean_new
+        my_ema = ema_round_update(ema, me, coords, q, cfg.alpha)
         ema_delta = jnp.zeros_like(ema).at[me].set(my_ema - ema[me])
         new_ema = ema + jax.lax.psum(ema_delta, axes)
-        local_stats = jnp.stack(
-            [stats.touched.astype(jnp.float32), stats.misses.astype(jnp.float32)]
-        )
+        local_stats = jnp.stack([
+            stats.touched.astype(jnp.float32),
+            stats.misses.astype(jnp.float32),
+            stats.reads.astype(jnp.float32),
+        ])
         tot_stats = jax.lax.psum(local_stats, axes)
         new_leaves = tuple(
             jnp.asarray(l)[None] for l in dataclasses.astuple(new_cache)

@@ -1,0 +1,77 @@
+"""Hypothesis compatibility shim.
+
+Property tests import `given`/`settings`/`strategies` from here instead of
+from `hypothesis` directly. When hypothesis is installed, this module is a
+transparent re-export and the tests run as real property tests. When it is
+absent (the tier-1 container does not ship it), a deterministic example-based
+fallback kicks in: each strategy draws from a fixed-seed numpy Generator and
+`given` simply replays `max_examples` drawn examples. Coverage is weaker than
+real shrinking-and-fuzzing, but the suite stays collectable and the
+properties are still exercised on a reproducible sample.
+
+Only the strategy surface the suite actually uses is implemented:
+`st.integers(lo, hi)` and `st.lists(elem, min_size=, max_size=)`.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import types
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_EXAMPLES = 20
+    _SEED = 0xC0FFEE
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def _lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            k = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(k)]
+
+        return _Strategy(draw)
+
+    strategies = types.SimpleNamespace(integers=_integers, lists=_lists)
+
+    def settings(**kwargs):
+        """Records max_examples on the decorated test; other knobs ignored."""
+
+        def deco(fn):
+            fn._compat_max_examples = kwargs.get("max_examples", _DEFAULT_EXAMPLES)
+            return fn
+
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            # NOTE: the runner takes no parameters and carries no __wrapped__,
+            # so pytest does not mistake the strategy arguments for fixtures.
+            def run():
+                n = getattr(run, "_compat_max_examples", None)
+                if n is None:
+                    n = getattr(fn, "_compat_max_examples", _DEFAULT_EXAMPLES)
+                rng = np.random.default_rng(_SEED)
+                for _ in range(n):
+                    fn(*[s.draw(rng) for s in strats])
+
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            run._compat_max_examples = getattr(fn, "_compat_max_examples", None)
+            return run
+
+        return deco

@@ -7,6 +7,14 @@ import pytest
 import jax
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running simulator / engine-parity tests "
+        "(deselect with `-m 'not slow'`)",
+    )
+
+
 @pytest.fixture(scope="session")
 def tiny_graph():
     from repro.graph.generators import powerlaw_graph
@@ -44,11 +52,10 @@ def graph_embedding(small_graph, landmark_index):
 
 @pytest.fixture(scope="session")
 def host_mesh():
+    from repro.launch.mesh import make_auto_mesh
+
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_auto_mesh((n, 1), ("data", "model"))
 
 
 def bfs_oracle(g, source: int, max_hops: int = 10**9):

@@ -1,0 +1,76 @@
+"""Differential property test: the JAX set-associative cache vs the
+simulator's OrderedDict LRU (`repro.core.serving.LRUCache`) on shared
+random access traces.
+
+Fully-associative configuration (n_sets=1): the device cache must agree
+with the paper's plain LRU on EVERY hit/miss decision, including eviction
+order under heavy pressure. Set-associative configurations can only differ
+where associativity forbids (a set overflowing its ways evicts earlier than
+global LRU would); there the device cache's hits must be a subset of the
+oracle's and its misses can only exceed them.
+"""
+
+from collections import OrderedDict
+
+import numpy as np
+import jax.numpy as jnp
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import cache as C
+from repro.core.serving import LRUCache
+
+
+def _access_one(state, key):
+    """Sequential access against the device cache: probe; insert on miss.
+    Returns (hit?, new_state)."""
+    ks = jnp.asarray([key], jnp.int32)
+    found, *_, state = C.cache_lookup(state, ks)
+    hit = bool(found[0])
+    if not hit:
+        state = C.cache_insert(
+            state, ks, jnp.asarray([[key]], jnp.int32),
+            jnp.asarray([1]), jnp.asarray([-1]),
+        )
+    return hit, state
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 11), min_size=1, max_size=150))
+def test_fully_associative_matches_simulator_lru(trace):
+    """n_sets=1: exact hit/miss agreement with the simulator's LRUCache,
+    eviction pressure included (12 keys through 4 ways)."""
+    ways = 4
+    state = C.make_cache(1, ways, 1)
+    oracle = LRUCache(ways)
+    for i, key in enumerate(trace):
+        hit, state = _access_one(state, key)
+        assert hit == oracle.access(key), (i, key, trace)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 39), min_size=1, max_size=200))
+def test_set_associative_matches_per_set_lru(trace):
+    """4-way sets under pressure (40 keys through 16 entries): each set is
+    an independent LRU of its ways, so one simulator LRUCache per set must
+    reproduce every hit/miss decision -- exactly what associativity permits,
+    no more, no less."""
+    n_sets, ways = 4, 4
+    state = C.make_cache(n_sets, ways, 1)
+    oracles = [LRUCache(ways) for _ in range(n_sets)]
+    for i, key in enumerate(trace):
+        hit, state = _access_one(state, key)
+        s = int(np.asarray(C._hash_keys(jnp.asarray([key], jnp.int32), n_sets))[0])
+        assert hit == oracles[s].access(key), (i, key, trace)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 23), min_size=1, max_size=120))
+def test_overprovisioned_sets_match_exactly(trace):
+    """With ways >= key universe no set can overflow: the set-associative
+    cache degenerates to exact LRU semantics (cold misses only here, as both
+    capacities exceed the universe) and must agree everywhere."""
+    state = C.make_cache(4, 24, 1)
+    oracle = LRUCache(4 * 24)
+    for key in trace:
+        hit, state = _access_one(state, key)
+        assert hit == oracle.access(key), (key, trace)

@@ -7,7 +7,7 @@ from collections import OrderedDict
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import cache as C
 

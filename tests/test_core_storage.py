@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.storage import (
     StorageTier, bucket_by_owner, build_storage, multi_read_ref,
@@ -92,8 +92,9 @@ def test_bucket_by_owner_properties(ids, n_shards, capacity):
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_auto_mesh
+
+    return make_auto_mesh((1, 1), ("data", "model"))
 
 
 def test_sharded_multi_read_single_device(tiny_graph):

@@ -4,7 +4,7 @@ best-score preference, stealing to next-best, drop semantics."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.dispatch import capacity_dispatch, gather_by_dispatch, scatter_back
 
@@ -66,6 +66,74 @@ def test_dispatch_invariants(T, P, cap, seed):
     if P * cap >= T and P <= 2:
         d2 = capacity_dispatch(scores, capacity=cap, n_rounds=P)
         assert (np.asarray(d2.assignment) >= 0).all()
+
+
+def test_empty_batch():
+    """T=0 must produce empty, well-shaped outputs (an idle serving round)."""
+    scores = jnp.zeros((0, 3), jnp.float32)
+    d = capacity_dispatch(scores, capacity=4, n_rounds=2)
+    assert d.assignment.shape == (0,) and d.position.shape == (0,)
+    np.testing.assert_array_equal(np.asarray(d.counts), [0, 0, 0])
+    x = jnp.zeros((0, 5), jnp.float32)
+    buf = gather_by_dispatch(x, d, 3, 4)
+    assert buf.shape == (3, 4, 5)
+    back = scatter_back(buf, d, 0)
+    assert back.shape == (0, 5)
+
+
+def test_all_queries_to_one_processor():
+    """Hash affinity worst case: every item prefers processor 1 and only
+    processor 1 is finite; capacity bounds what lands, the rest drop."""
+    T, P, cap = 10, 4, 6
+    scores = jnp.full((T, P), jnp.inf).at[:, 1].set(0.0)
+    d = capacity_dispatch(scores, capacity=cap, n_rounds=4)
+    a = np.asarray(d.assignment)
+    assert (a[a >= 0] == 1).all()
+    assert (a == 1).sum() == cap and (a == -1).sum() == T - cap
+    np.testing.assert_array_equal(np.asarray(d.counts), [0, cap, 0, 0])
+
+
+def test_overflow_steals_to_next_best():
+    """Overflow beyond per-processor capacity flows to the second choice in
+    score order instead of dropping (total capacity suffices)."""
+    T, P, cap = 9, 3, 3
+    # everyone prefers 0, second-best differs by row
+    second = np.tile([1, 2, 1], 3)
+    scores = np.full((T, P), 2.0, np.float32)
+    scores[:, 0] = 0.0
+    scores[np.arange(T), second] = 1.0
+    d = capacity_dispatch(jnp.asarray(scores), capacity=cap, n_rounds=3)
+    a = np.asarray(d.assignment)
+    assert (a >= 0).all()  # nothing dropped: stealing absorbed the overflow
+    np.testing.assert_array_equal(np.asarray(d.counts), [3, 3, 3])
+    # overflow cascades down the preference order: second choices fill up
+    # before anything lands on a third choice
+    overflow = a != 0
+    assert (a[overflow] == second[overflow]).sum() >= cap
+
+
+def test_all_inf_rows_never_assigned():
+    """A row with no finite destination (a padded query) must stay -1 even
+    when capacity is free."""
+    scores = jnp.asarray(np.array([
+        [0.0, 1.0],
+        [np.inf, np.inf],
+        [1.0, 0.0],
+    ], np.float32))
+    d = capacity_dispatch(scores, capacity=4, n_rounds=3)
+    a = np.asarray(d.assignment)
+    assert a[1] == -1 and a[0] == 0 and a[2] == 1
+    np.testing.assert_array_equal(np.asarray(d.counts), [1, 1])
+
+
+def test_gather_fill_value_marks_empty_slots():
+    scores = jnp.asarray(np.array([[0.0, 1.0]], np.float32))
+    d = capacity_dispatch(scores, capacity=2, n_rounds=1)
+    ids = jnp.asarray(np.array([7], np.int32))
+    buf = gather_by_dispatch(ids, d, 2, 2, fill_value=-1)
+    buf = np.asarray(buf)
+    assert buf[0, 0] == 7
+    assert (buf.reshape(-1) == -1).sum() == 3  # all unused slots padded
 
 
 def test_gather_scatter_roundtrip():

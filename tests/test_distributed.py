@@ -15,8 +15,9 @@ from repro.models.param import init_params
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_auto_mesh
+
+    return make_auto_mesh((1, 1), ("data", "model"))
 
 
 GNN_CASES = ["egnn", "pna", "graphcast", "equiformer-v2"]
@@ -114,8 +115,7 @@ def test_grouting_device_serving_counts():
 def test_logical_rules_divisibility_fallback():
     from repro.distributed.mesh_utils import resolve_pspec, set_mesh_rules
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = _mesh11()
     with set_mesh_rules(mesh) as lr:
         # heads=40 on a 1-way model axis trivially ok
         spec = resolve_pspec(("batch", "heads"), (8, 40), lr)
@@ -125,8 +125,7 @@ def test_logical_rules_divisibility_fallback():
     import numpy as np
     from repro.distributed.mesh_utils import LogicalRules, DEFAULT_RULES
 
-    mesh2 = jax.make_mesh((1, 1), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = _mesh11()
     lr2 = LogicalRules(mesh2, dict(DEFAULT_RULES))
     assert resolve_pspec(("heads",), (40,), lr2) is not None
 

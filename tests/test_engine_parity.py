@@ -1,0 +1,256 @@
+"""Differential oracle: ServingEngine vs ServingSimulator.
+
+The two execution paths share no code below the workload: the engine is a
+jit `lax.scan` with batched BFS, set-associative caches and dispatch-level
+stealing; the simulator is an event-driven python loop with OrderedDict LRU
+caches and scalar BFS. If the whole route -> dispatch -> read -> cache ->
+expand pipeline is correct, they must agree.
+
+Exact-parity configuration: caches sized far beyond the working set (only
+cold misses, where LRU and set-associative LRU coincide), storage rows wide
+enough that no continuation rows exist, stealing disabled, and the
+simulator replaying the engine's executed assignment. Then for every
+routing scheme and every workload:
+
+  - per-query result counts equal |N_h(q)| - 1 (BFS ball oracle),
+  - global AND per-processor cache-touch sets match exactly,
+  - per-processor query counts match exactly,
+  - per-processor storage read volumes match exactly.
+
+Steal-parity configuration: per-round slot capacity is constrained so
+dispatch-level hard stealing fires; execution parity must still hold under
+the stolen placement, and the engine's load balance must beat the sticky
+no-steal placement.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.embedding import EmbedConfig, build_graph_embedding
+from repro.core.landmarks import build_landmark_index
+from repro.core.router import Router, RouterConfig
+from repro.core.serving import BallCache, ServingSimulator, SimRouter, SimRouterConfig
+from repro.core.storage import build_storage
+from repro.core.workloads import (
+    antilocality_workload, concentrated_workload, drifting_hotspot_workload,
+    hotspot_workload, uniform_workload,
+)
+from repro.graph.csr import to_padded
+from repro.graph.generators import community_graph
+from repro.serve.engine import EngineRunConfig, ServingEngine
+
+P = 4
+HOPS = 2
+SETS, WAYS = 1024, 16  # capacity 16K >> any per-proc working set: cold misses only
+SCHEMES = ("next_ready", "hash", "landmark", "embed")
+N_QUERIES = 160
+ROUND = 32
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    g = community_graph(n=2400, community_size=60, intra_degree=6,
+                        inter_degree=1.0, seed=1)
+    max_deg = int(g.degree().max())
+    adj = to_padded(g, max_degree=max_deg)  # no continuation rows
+    assert adj.n_rows == g.n
+    tier = build_storage(adj, n_shards=4)
+    li = build_landmark_index(g, n_processors=P, n_landmarks=16, min_separation=2)
+    ge = build_graph_embedding(li.dist_to_lm, li.landmarks,
+                               EmbedConfig(dim=8, lm_steps=100, node_steps=40))
+    cfg = EngineRunConfig(
+        n_processors=P, round_size=ROUND, capacity=ROUND, hops=HOPS,
+        max_frontier=256, cache_sets=SETS, cache_ways=WAYS, chain_depth=2,
+        track_touched=True,
+    )
+    engines = {}
+    for scheme in SCHEMES:
+        router = Router(P, RouterConfig(scheme=scheme), landmark_index=li,
+                        embedding=ge, seed=3)
+        engines[scheme] = ServingEngine(tier, router, cfg)
+    return dict(g=g, tier=tier, li=li, ge=ge, engines=engines,
+                balls=BallCache(g))
+
+
+def _workload(g, name):
+    if name == "uniform":
+        return uniform_workload(g, n_queries=N_QUERIES, seed=2)
+    if name == "hotspot":
+        return hotspot_workload(g, r=1, n_hotspots=20, queries_per_hotspot=8, seed=2)
+    if name == "drifting":
+        return drifting_hotspot_workload(g, n_phases=4, n_hotspots=10,
+                                         queries_per_hotspot=4, r=1, seed=2)
+    if name == "antilocality":
+        return antilocality_workload(g, n_queries=N_QUERIES, seed=2)
+    raise ValueError(name)
+
+
+def _oracle_sim(cluster, scheme, **kw):
+    rt = SimRouter(P, SimRouterConfig(scheme=scheme), landmark_index=cluster["li"],
+                   embedding=cluster["ge"])
+    return ServingSimulator(cluster["g"], P, rt, cache_entries=SETS * WAYS,
+                            h=HOPS, ball_cache=cluster["balls"], **kw)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("wl_name", ["uniform", "hotspot", "drifting", "antilocality"])
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_engine_simulator_exact_parity(cluster, scheme, wl_name):
+    g = cluster["g"]
+    wl = _workload(g, wl_name)
+    eng = cluster["engines"][scheme]
+    res, _ = eng.run(wl)
+
+    # engine sanity: capacity == round_size means dispatch never steals
+    assert res.unplaced == 0 and res.stolen == 0 and not res.truncated
+    np.testing.assert_array_equal(res.assignment, res.router_assignment)
+
+    # per-query results vs the BFS ball oracle
+    balls = cluster["balls"]
+    for i, q in enumerate(wl.query_nodes):
+        _, result_size = balls.get(int(q), HOPS)
+        assert res.counts[i] == result_size - 1, (i, int(q))
+
+    # replay the engine's placement through the event simulator
+    sim = _oracle_sim(cluster, scheme, steal=False)
+    sres = sim.run(wl, assignments=res.assignment)
+
+    # per-processor query counts
+    np.testing.assert_array_equal(
+        sres.per_proc_queries, np.bincount(res.assignment, minlength=P))
+    np.testing.assert_array_equal(sres.per_proc_queries, res.per_proc_queries)
+
+    # cache-touch sets: per processor and global
+    etouch = res.touch_sets()
+    for p in range(P):
+        assert etouch[p] == sres.touched_sets[p], (scheme, wl_name, p)
+    assert set().union(*etouch) == set().union(*sres.touched_sets)
+
+    # storage read volumes (unique rows fetched == the sim's cold misses)
+    np.testing.assert_array_equal(res.per_proc_reads, sres.per_proc_misses)
+    assert res.reads == sres.cache_misses
+    # touched volume and therefore effective hits agree too
+    assert res.touched == sres.cache_hits + sres.cache_misses
+    assert res.touched - res.reads == sres.cache_hits
+
+
+@pytest.mark.slow
+def test_engine_parity_under_hard_stealing(cluster):
+    """Constrained slots force dispatch-level stealing; execution parity must
+    hold for the stolen placement, and load balance must beat no-steal."""
+    g = cluster["g"]
+    wl = concentrated_workload(g, n_hotspots=2, reps=40, seed=5)
+    li, ge = cluster["li"], cluster["ge"]
+    router = Router(P, RouterConfig(scheme="hash", steal_margin=1e9),
+                    landmark_index=li, embedding=ge, seed=3)
+    cfg = EngineRunConfig(
+        n_processors=P, round_size=20, capacity=7, hops=HOPS,
+        max_frontier=256, cache_sets=SETS, cache_ways=WAYS, chain_depth=2,
+        track_touched=True,
+    )
+    eng = ServingEngine(cluster["tier"], router, cfg)
+    res, (rstate, _, _) = eng.run(wl)
+    assert res.unplaced == 0 and not res.truncated
+    assert res.stolen > 0  # two hot nodes hash to <= 2 procs; 20 > 7 slots
+    # acks target the router-chosen processor: even under heavy stealing the
+    # router's queues fully drain (no load leak onto the hot processor)
+    np.testing.assert_allclose(np.asarray(rstate.load), 0.0)
+
+    sim = _oracle_sim(cluster, "hash", steal=False)
+    sres = sim.run(wl, assignments=res.assignment)
+    np.testing.assert_array_equal(res.per_proc_queries, sres.per_proc_queries)
+    etouch = res.touch_sets()
+    for p in range(P):
+        assert etouch[p] == sres.touched_sets[p]
+    np.testing.assert_array_equal(res.per_proc_reads, sres.per_proc_misses)
+
+    # stealing spreads the two hot queues across all processors
+    assert res.per_proc_queries.max() <= wl.query_nodes.size - res.stolen
+    assert res.load_imbalance < 2.0
+
+    # and the engine's placement deviates from sticky hashing by exactly the
+    # stolen queries (steal tolerance on per-processor load)
+    sticky = np.bincount(res.router_assignment, minlength=P)
+    l1 = np.abs(res.per_proc_queries - sticky).sum()
+    assert l1 <= 2 * res.stolen
+
+
+@pytest.mark.slow
+def test_engine_warm_state_carries_cache(cluster):
+    """Second burst against the returned state hits the warm caches (the
+    paper's repeated-burst experiment on the jit path)."""
+    g = cluster["g"]
+    wl = hotspot_workload(g, r=1, n_hotspots=10, queries_per_hotspot=8, seed=7)
+    eng = cluster["engines"]["embed"]
+    res1, state = eng.run(wl)
+    res2, _ = eng.run(wl, state=state)
+    assert res2.reads < res1.reads
+    assert res2.hit_rate > res1.hit_rate
+
+
+# ---------------------------------------------------------------------------
+# new workload generators (fast satellite sanity; cheap private graph so the
+# quick CI job `-m "not slow"` runs them without the expensive cluster)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_g():
+    return community_graph(n=600, community_size=60, intra_degree=6,
+                           inter_degree=1.0, seed=7)
+
+
+def test_drifting_hotspot_workload_properties(small_g):
+    g = small_g
+    wl = drifting_hotspot_workload(g, n_phases=3, n_hotspots=5,
+                                   queries_per_hotspot=4, r=1, seed=0)
+    assert wl.query_nodes.size == 3 * 5 * 4
+    assert wl.query_nodes.min() >= 0 and wl.query_nodes.max() < g.n
+    assert wl.hotspot_id.min() >= 0 and wl.hotspot_id.max() < 5
+    # determinism
+    wl2 = drifting_hotspot_workload(g, n_phases=3, n_hotspots=5,
+                                    queries_per_hotspot=4, r=1, seed=0)
+    np.testing.assert_array_equal(wl.query_nodes, wl2.query_nodes)
+
+
+def test_antilocality_workload_properties(small_g):
+    g = small_g
+    wl = antilocality_workload(g, n_queries=200, seed=0)
+    assert wl.query_nodes.size == 200
+    # all distinct: zero temporal reuse by construction
+    assert len(set(wl.query_nodes.tolist())) == 200
+    # consecutive queries land far apart in id space (different communities)
+    gaps = np.abs(np.diff(wl.query_nodes.astype(np.int64)))
+    assert np.median(gaps) > 60  # > community_size
+
+
+def test_unplaced_queries_marked_not_zero(small_g):
+    """With steal exhausted (one dispatch pass, tiny capacity) overflow
+    queries stay unplaced; their counts must read -1, never a plausible 0."""
+    g = small_g
+    tier = build_storage(to_padded(g, max_degree=int(g.degree().max())), n_shards=1)
+    router = Router(P, RouterConfig(scheme="hash", steal_margin=1e9))
+    cfg = EngineRunConfig(
+        n_processors=P, round_size=20, capacity=5, steal_rounds=1, hops=1,
+        max_frontier=128, cache_sets=64, cache_ways=4, chain_depth=2,
+    )
+    wl = concentrated_workload(g, n_hotspots=1, reps=20, seed=3)
+    res, _ = ServingEngine(tier, router, cfg).run(wl)
+    assert res.unplaced > 0  # 20 identical queries, 5 slots, no second pass
+    assert (res.counts[res.assignment < 0] == -1).all()
+    assert (res.counts[res.assignment >= 0] >= 0).all()
+
+
+def test_antilocality_defeats_caching(small_g):
+    """The adversarial stream's hit rate collapses vs the hotspot stream
+    under the same scheme and cache (paper Fig. 20 taken to the limit).
+    Hash routing needs no landmark/embedding preprocessing."""
+    g = small_g
+    def sim():
+        rt = SimRouter(P, SimRouterConfig(scheme="hash"))
+        return ServingSimulator(g, P, rt, cache_entries=400, h=HOPS,
+                                ball_cache=BallCache(g))
+    hot = sim().run(hotspot_workload(g, r=1, n_hotspots=20,
+                                     queries_per_hotspot=8, seed=2))
+    anti = sim().run(antilocality_workload(g, n_queries=N_QUERIES, seed=2))
+    assert anti.hit_rate < hot.hit_rate

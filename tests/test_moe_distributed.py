@@ -29,8 +29,9 @@ _SCRIPT = textwrap.dedent("""
                     dtype=jnp.float32)
     params = init_params(moe_param_specs(cfg), jax.random.PRNGKey(1))
     rng = np.random.default_rng(0)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_auto_mesh
+
+    mesh = make_auto_mesh((2, 4), ("data", "model"))
     for T, cap in ((16, 16), (256, 256)):  # weight-stationary / train regime
         x = jnp.asarray(rng.standard_normal((T, 16)).astype(np.float32))
         out_ref, _ = moe_ffn(params, x, cfg, capacity=cap)

@@ -33,7 +33,7 @@ def engine(tiny_graph):
 def test_neighbor_aggregation_matches_bfs(engine, h):
     g, tier, cache, cfg = engine
     queries = jnp.asarray(np.array([0, 3, 50, 123, -1], np.int32))
-    counts, cache, stats = run_neighbor_aggregation(
+    counts, cache, stats, _ = run_neighbor_aggregation(
         None, cache, queries, h=h, n=g.n, cfg=cfg,
         multi_read=make_ref_multi_read(tier),
     )
@@ -52,8 +52,8 @@ def test_cache_improves_second_pass(engine):
     cache = cache_lib.make_cache(n_sets=512, n_ways=8, row_width=tier.row_width)
     q = jnp.asarray(np.array([7, 8, 9], np.int32))
     mr = make_ref_multi_read(tier)
-    _, cache, s1 = run_neighbor_aggregation(None, cache, q, 2, g.n, cfg, mr)
-    _, cache, s2 = run_neighbor_aggregation(None, cache, q, 2, g.n, cfg, mr)
+    _, cache, s1, _ = run_neighbor_aggregation(None, cache, q, 2, g.n, cfg, mr)
+    _, cache, s2, _ = run_neighbor_aggregation(None, cache, q, 2, g.n, cfg, mr)
     assert int(s2.misses) < int(s1.misses)
     assert int(s2.touched) == int(s1.touched)  # same work, more hits
 
@@ -61,7 +61,7 @@ def test_cache_improves_second_pass(engine):
 def test_stats_consistency(engine):
     g, tier, cache, cfg = engine
     q = jnp.asarray(np.array([11, 42], np.int32))
-    _, cache2, stats = run_neighbor_aggregation(
+    _, cache2, stats, _ = run_neighbor_aggregation(
         None, cache, q, 2, g.n, cfg, make_ref_multi_read(tier))
     assert int(stats.misses) <= int(stats.touched)
     # engine-reported misses equal the cache's own miss counter delta
@@ -72,7 +72,7 @@ def test_no_cache_mode(engine):
     g, tier, cache, _ = engine
     cfg = EngineConfig(max_frontier=320, chain_depth=32, use_cache=False)
     q = jnp.asarray(np.array([5], np.int32))
-    counts, cache2, stats = run_neighbor_aggregation(
+    counts, cache2, stats, _ = run_neighbor_aggregation(
         None, cache, q, 2, g.n, cfg, make_ref_multi_read(tier))
     assert int(stats.misses) == int(stats.touched)  # everything from storage
     _, result = hhop_ball(g, 5, 2)
@@ -121,7 +121,7 @@ def test_truncation_flagged():
     cache = cache_lib.make_cache(64, 2, adj.max_degree)
     cfg = EngineConfig(max_frontier=4, chain_depth=8)  # absurdly small F
     q = jnp.asarray(np.array([0], np.int32))
-    _, _, stats = run_neighbor_aggregation(
+    _, _, stats, _ = run_neighbor_aggregation(
         None, cache, q, 2, g.n, cfg, make_ref_multi_read(tier))
     assert bool(np.asarray(stats.truncated)[0])
 
@@ -132,6 +132,6 @@ def test_chain_truncation_flagged(engine, tiny_graph):
     g, tier, cache, _ = engine
     cfg = EngineConfig(max_frontier=320, chain_depth=2)
     q = jnp.asarray(np.array([0], np.int32))  # node 0 is a hub in this graph
-    _, _, stats = run_neighbor_aggregation(
+    _, _, stats, _ = run_neighbor_aggregation(
         None, cache, q, 1, g.n, cfg, make_ref_multi_read(tier))
     assert bool(np.asarray(stats.truncated)[0])

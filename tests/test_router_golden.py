@@ -1,0 +1,68 @@
+"""Golden-trace regression tests for all four routing schemes.
+
+A fixed-seed graph/index/embedding and a fixed 64-query stream produce a
+frozen per-query assignment string per scheme. Any change to routing math
+(Eq. 3/5/7, steal margins, tie-breaking, hashing) flips digits here and is
+therefore visible -- and reviewable -- in the diff. Update the goldens
+deliberately, never to silence a failure you can't explain.
+
+The traces double as behavioural documentation: next_ready round-robins,
+hash scatters uniformly, landmark/embed concentrate by topology.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.embedding import EmbedConfig, build_graph_embedding
+from repro.core.landmarks import build_landmark_index
+from repro.core.router import Router, RouterConfig
+from repro.graph.generators import community_graph
+
+P = 4
+
+GOLDEN = {
+    "next_ready": "0123012301230123012301230123012301230123012301230123012301230123",
+    "hash": "2303212230123223313031002133200213120321121300331122032031200102",
+    "landmark": "0013111230321010222123013120200101312221220001132321101222201310",
+    "embed": "2222222120212020111212022210100102221112110002121212102111101020",
+}
+
+
+@pytest.fixture(scope="module")
+def golden_cluster():
+    g = community_graph(n=1200, community_size=60, intra_degree=6,
+                        inter_degree=1.0, seed=9)
+    li = build_landmark_index(g, n_processors=P, n_landmarks=12, min_separation=2)
+    ge = build_graph_embedding(li.dist_to_lm, li.landmarks,
+                               EmbedConfig(dim=6, lm_steps=80, node_steps=30, seed=0))
+    rng = np.random.default_rng(11)
+    queries = rng.integers(0, g.n, 64).astype(np.int32)
+    return li, ge, queries
+
+
+@pytest.mark.parametrize("scheme", sorted(GOLDEN))
+def test_assignment_trace_frozen(golden_cluster, scheme):
+    li, ge, queries = golden_cluster
+    r = Router(P, RouterConfig(scheme=scheme), landmark_index=li, embedding=ge, seed=3)
+    state = r.init_state()
+    state, assign = r.route_batch(state, jnp.asarray(queries))
+    trace = "".join(str(int(x)) for x in np.asarray(assign))
+    assert trace == GOLDEN[scheme], (
+        f"{scheme} routing changed: got\n  {trace}\nexpected\n  {GOLDEN[scheme]}\n"
+        "If this change is intentional, update GOLDEN with the new trace."
+    )
+
+
+def test_golden_traces_are_scheme_distinct():
+    """The four schemes genuinely route differently on this stream."""
+    assert len(set(GOLDEN.values())) == len(GOLDEN)
+    for scheme, trace in GOLDEN.items():
+        counts = np.bincount([int(c) for c in trace], minlength=P)
+        if scheme in ("next_ready", "hash"):
+            # load-balancing / uniform-hashing schemes must use everyone
+            assert counts.min() > 0, (scheme, counts)
+        else:
+            # topology-aware schemes may legitimately park a processor, but
+            # must not collapse onto one
+            assert (counts > 0).sum() >= 2, (scheme, counts)

@@ -15,6 +15,8 @@ from repro.core.workloads import (
 )
 from repro.graph.partition import hash_partition
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def cluster(small_graph, landmark_index, graph_embedding):

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.graph.csr import build_csr, csr_to_edge_index, make_bidirected, to_padded
 from repro.graph.generators import powerlaw_graph
@@ -88,8 +88,9 @@ def test_grouting_end_to_end_device_path(small_graph, landmark_index, graph_embe
     g = small_graph
     adj = to_padded(g, max_degree=16)
     tier = build_storage(adj, n_shards=1)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_auto_mesh
+
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
     qpp = 16
     cfg = GServeConfig(
         n_nodes=g.n, n_rows=adj.n_rows, row_width=adj.max_degree,
