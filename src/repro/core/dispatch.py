@@ -16,6 +16,16 @@ still-unassigned item to its best remaining destination; items whose arrival
 rank within the destination exceeds remaining capacity stay unassigned and
 see that destination masked out in later passes. `n_rounds` passes guarantee
 assignment if total capacity >= items (stealing semantics).
+
+Since the carry-over-queue PR a round is NOT guaranteed to drain: under
+sustained overload `capacity_dispatch` legitimately returns -1 rows, and the
+serving loop parks them in a bounded FIFO backlog ring (`BacklogState` +
+`backlog_offer`/`backlog_admit` below) to be re-offered -- ahead of fresh
+arrivals -- in later rounds. Admission control is drop-oldest: when the ring
+overflows, the queries that have already waited longest are dropped (they
+would be the next to violate any latency SLO anyway). The same three
+functions drive the single-host engine scan, the shard_map admission driver
+(repro.serve.graph_serving), and the host-side examples.
 """
 
 from __future__ import annotations
@@ -113,3 +123,88 @@ def scatter_back(
     pos = jnp.where(ok, d.position, 0)
     out = buf[dest, pos]
     return jnp.where(ok.reshape((T,) + (1,) * (out.ndim - 1)), out, 0)
+
+
+# ---------------------------------------------------------------------------
+# Carry-over admission queue (bounded FIFO backlog between serving rounds)
+# ---------------------------------------------------------------------------
+
+
+class BacklogState(NamedTuple):
+    """Bounded FIFO ring of queries that dispatch could not place.
+
+    Entries are front-packed oldest-first; -1 marks empty slots. `qid` is the
+    query's global index in the workload (its arrival round is qid // B, so
+    latency-in-rounds needs no extra storage); `node` is the query node id.
+    """
+
+    qid: jax.Array  # (K,) int32, -1 = empty
+    node: jax.Array  # (K,) int32, -1 = empty
+
+    @property
+    def capacity(self) -> int:
+        return self.qid.shape[0]
+
+    def depth(self) -> jax.Array:
+        return jnp.sum(self.qid >= 0).astype(jnp.int32)
+
+
+def make_backlog(capacity: int) -> BacklogState:
+    return BacklogState(
+        qid=jnp.full((capacity,), -1, jnp.int32),
+        node=jnp.full((capacity,), -1, jnp.int32),
+    )
+
+
+def backlog_offer(
+    backlog: BacklogState, fresh_node: jax.Array, fresh_qid: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Build the round's offered buffer: backlog (oldest first) AHEAD of
+    fresh arrivals, so waiting queries get first claim on capacity.
+
+    fresh_node: (B,) int32, -1 padded. Returns (offered_node, offered_qid),
+    both (K + B,); invalid entries are -1 in both.
+    """
+    off_node = jnp.concatenate([backlog.node, fresh_node])
+    off_qid = jnp.concatenate(
+        [backlog.qid, jnp.where(fresh_node >= 0, fresh_qid, -1)]
+    )
+    return off_node, off_qid
+
+
+def backlog_admit(
+    offered_node: jax.Array,
+    offered_qid: jax.Array,
+    leftover: jax.Array,
+    capacity: int,
+) -> Tuple[BacklogState, jax.Array, jax.Array, jax.Array]:
+    """Admission control after a dispatch round (drop-oldest policy).
+
+    leftover: (M,) bool -- offered entries that were valid but NOT placed
+    this round, in offered (= FIFO) order. The newest `capacity` leftovers
+    are re-queued front-packed; older ones are dropped (they have waited
+    longest and are the next SLO casualties).
+
+    Returns (backlog', dropped (M,) bool, depth () int32, n_dropped () int32).
+    """
+    rank = jnp.cumsum(leftover.astype(jnp.int32)) - 1  # FIFO rank among leftovers
+    total = jnp.sum(leftover.astype(jnp.int32))
+    n_dropped = jnp.maximum(total - capacity, 0)
+    keep = leftover & (rank >= n_dropped)
+    dropped = leftover & (rank < n_dropped)
+    # kept entry with FIFO rank r lands at slot r - n_dropped; everything
+    # else scatters to the out-of-range sentinel and is dropped.
+    pos = jnp.where(keep, rank - n_dropped, capacity)
+    new_qid = jnp.full((capacity,), -1, jnp.int32).at[pos].set(
+        jnp.where(keep, offered_qid, -1), mode="drop"
+    )
+    new_node = jnp.full((capacity,), -1, jnp.int32).at[pos].set(
+        jnp.where(keep, offered_node, -1), mode="drop"
+    )
+    depth = jnp.sum(keep.astype(jnp.int32))
+    return (
+        BacklogState(qid=new_qid, node=new_node),
+        dropped,
+        depth.astype(jnp.int32),
+        n_dropped.astype(jnp.int32),
+    )

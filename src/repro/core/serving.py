@@ -18,6 +18,14 @@ Two execution paths share the core logic (DESIGN.md §2):
 The simulator's per-processor cache is a plain LRU (OrderedDict), i.e. the
 paper's exact eviction policy; the device path's set-associative LRU is
 validated against it in tests.
+
+``ServingSimulator.run_rounds`` is the queue-aware mirror of the engine's
+continuous-batching loop: the same bounded carry-over backlog (offered
+ahead of fresh arrivals), the same bounded dispatch (a numpy mirror of
+``core.dispatch.capacity_dispatch``), and the same drop-oldest admission
+control -- implemented independently in plain python/numpy so the
+engine/simulator differential oracle can compare per-round backlog depths,
+per-query completion rounds, and drop sets under oversubscribed traffic.
 """
 
 from __future__ import annotations
@@ -148,6 +156,64 @@ class SimRouter:
 
 
 # ---------------------------------------------------------------------------
+# numpy mirror of core.dispatch.capacity_dispatch (for the queue-aware
+# oracle: same iterative best-choice passes, same tie-breaking)
+# ---------------------------------------------------------------------------
+
+
+def mirror_capacity_dispatch(
+    pref: np.ndarray,
+    load: np.ndarray,
+    capacity: int,
+    n_rounds: int,
+    load_factor: float,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Scalar mirror of the engine's dispatch scoring + capacity_dispatch.
+
+    pref: (T,) int32 router pick per offered query (-1 = padded/invalid --
+    never assigned). Scores are the engine's: preferred processor costs 0,
+    any other 1 + load/load_factor (hard stealing flows overflow to the
+    idlest). Score GAPS between processors are >= 1/load_factor while float
+    epsilon is ~1e-16, and ties break on the lowest index in both argmins,
+    so the numpy and jnp dispatches agree exactly.
+
+    Returns (assignment (T,), position (T,)) with -1 for unplaced, matching
+    `capacity_dispatch` bit for bit.
+    """
+    T = pref.shape[0]
+    P = load.shape[0]
+    valid = pref >= 0
+    scores = np.full((T, P), np.inf)
+    if T:
+        base = 1.0 + load[None, :] / load_factor
+        scores[valid] = np.where(
+            np.arange(P)[None, :] == pref[valid][:, None], 0.0, base
+        )
+    assignment = np.full(T, -1, np.int32)
+    position = np.full(T, -1, np.int32)
+    used = np.zeros(P, np.int64)
+    masked = scores
+    for _ in range(n_rounds):
+        unassigned = assignment < 0
+        choice = masked.argmin(1) if T else np.zeros(0, np.int64)
+        has_choice = np.isfinite(masked.min(1)) if T else np.zeros(0, bool)
+        cand = np.where(unassigned & has_choice, choice, P)
+        rank = np.zeros(T, np.int64)
+        for p in range(P):
+            idxs = np.flatnonzero(cand == p)
+            rank[idxs] = np.arange(idxs.size)
+        free = capacity - used
+        cand_safe = np.minimum(cand, P - 1)
+        ok = unassigned & (cand < P) & (rank < free[cand_safe])
+        assignment[ok] = cand[ok]
+        position[ok] = used[cand_safe[ok]] + rank[ok]
+        used += np.bincount(cand[ok], minlength=P + 1)[:P]
+        retry = unassigned & ~ok & (cand < P)
+        masked[np.flatnonzero(retry), cand[retry]] = np.inf
+    return assignment, position
+
+
+# ---------------------------------------------------------------------------
 # Event-driven serving simulator
 # ---------------------------------------------------------------------------
 
@@ -176,6 +242,35 @@ class SimResult:
             f"resp={self.mean_response_ms:7.2f}ms  hit={self.hit_rate:6.3f}  "
             f"stolen={self.stolen}"
         )
+
+
+@dataclasses.dataclass
+class QueuedSimResult:
+    """Round-based (continuous batching) simulator outcome -- the queue-aware
+    half of the differential oracle. Per-query arrays follow the engine's
+    explicit-mask contract: -1 wherever `completed` is False."""
+
+    scheme: str
+    n_queries: int
+    n_rounds: int
+    completed: np.ndarray  # (Q,) bool
+    dropped: np.ndarray  # (Q,) bool -- drop-oldest admission victims
+    assignment: np.ndarray  # (Q,) int32 executing processor, -1 uncompleted
+    completion_round: np.ndarray  # (Q,) int32, -1 uncompleted
+    wait_rounds: np.ndarray  # (Q,) int32 completion - arrival round, -1
+    backlog_depth: np.ndarray  # (R,) ring depth after each round
+    drops_per_round: np.ndarray  # (R,)
+    offered_qids: List[List[int]]  # per round, valid offers in FIFO order
+    per_proc_queries: np.ndarray  # (P,)
+    per_proc_hits: np.ndarray  # (P,)
+    per_proc_misses: np.ndarray  # (P,) == storage reads
+    touched_sets: List[set]
+    cache_hits: int
+    cache_misses: int
+    hit_rate: float
+
+    def drop_set(self) -> set:
+        return set(np.nonzero(self.dropped)[0].tolist())
 
 
 class LRUCache:
@@ -337,6 +432,151 @@ class ServingSimulator:
             touched_sets=touched_sets,
         )
 
+    def run_rounds(
+        self,
+        wl: Workload,
+        *,
+        round_size: int,
+        capacity: int,
+        backlog_capacity: int,
+        dispatch_rounds: int = 0,
+        h: Optional[int] = None,
+        route_fn=None,
+        max_rounds: int = 100_000,
+    ) -> QueuedSimResult:
+        """Round-based continuous-batching mirror of `ServingEngine`.
+
+        Each round offers the carry-over backlog (oldest first) AHEAD of the
+        next `round_size` fresh arrivals, routes them, dispatches through the
+        numpy `capacity_dispatch` mirror (per-processor `capacity` slots,
+        hard stealing), executes placed queries against the per-processor
+        LRU caches, re-queues the leftovers FIFO and drops the oldest once
+        the ring exceeds `backlog_capacity`. Arrival rounds are followed by
+        drain rounds until the ring empties -- exactly the engine's
+        `run(..., drain=True)`.
+
+        `route_fn(round_idx, qids, nodes, load) -> picks` injects routing
+        decisions (the oracle replays the engine's recorded per-round router
+        assignments, bypassing float-sensitive router math the same way
+        `run(assignments=...)` does); the mirror increments load itself, one
+        per routed query, whichever path picked. Default is this simulator's
+        own `SimRouter`, exact for integer-arithmetic routing (hash); for
+        next_ready the engine's round-robin tie-break is not mirrored, and
+        landmark/embed score in different float widths -- replay those.
+        """
+        h = h or self.h
+        P = self.P
+        n_dispatch = dispatch_rounds if dispatch_rounds > 0 else P
+        lf = float(self.router.cfg.load_factor)
+        Q = int(wl.query_nodes.size)
+        arrival_rounds = -(-Q // round_size)
+        caches = [
+            LRUCache(self.cache_entries if self.use_cache else 0) for _ in range(P)
+        ]
+        backlog: List[int] = []  # qids, FIFO oldest first
+        completed = np.zeros(Q, bool)
+        dropped = np.zeros(Q, bool)
+        assignment = np.full(Q, -1, np.int32)
+        completion_round = np.full(Q, -1, np.int32)
+        wait_rounds = np.full(Q, -1, np.int32)
+        backlog_depth: List[int] = []
+        drops_per_round: List[int] = []
+        offered_log: List[List[int]] = []
+        per_proc = np.zeros(P, np.int64)
+        per_hits = np.zeros(P, np.int64)
+        per_miss = np.zeros(P, np.int64)
+        touched_sets: List[set] = [set() for _ in range(P)]
+        hits = misses = 0
+
+        r = 0
+        while r < arrival_rounds or backlog:
+            assert r < max_rounds, "round loop failed to terminate"
+            fresh = list(range(r * round_size, min((r + 1) * round_size, Q)))
+            offered = backlog + fresh  # backlog first: FIFO priority
+            offered_log.append(list(offered))
+            nodes = wl.query_nodes[offered].astype(np.int64)
+
+            # route (load starts at zero each round: every routed query is
+            # acked -- completed, re-queued, or dropped -- in the same round)
+            load = np.zeros(P)
+            if route_fn is not None:
+                pref = np.asarray(
+                    route_fn(r, np.asarray(offered), nodes, load.copy()),
+                    np.int32,
+                )
+                assert pref.shape == (len(offered),)
+                for p in pref:
+                    load[int(p)] += 1.0
+            else:
+                pref = np.zeros(len(offered), np.int32)
+                for i, q in enumerate(nodes):
+                    p = self.router.route(int(q), load)
+                    pref[i] = p
+                    load[p] += 1.0
+
+            assign, _pos = mirror_capacity_dispatch(
+                pref, load, capacity, n_dispatch, lf
+            )
+
+            # execute placed queries per processor in dispatch-slot order
+            # (order only matters under contended caches; the oracle's exact-
+            # parity config is cold-miss-only, but mirror it anyway)
+            for p in range(P):
+                mine = np.flatnonzero(assign == p)
+                mine = mine[np.argsort(_pos[mine], kind="stable")]
+                for i in mine:
+                    qid = offered[int(i)]
+                    q = int(wl.query_nodes[qid])
+                    touched, _result = self.balls.get(q, h)
+                    q_hits = 0
+                    if self.use_cache:
+                        c = caches[p]
+                        for u in touched:
+                            if c.access(int(u)):
+                                q_hits += 1
+                    q_miss = touched.size - q_hits
+                    hits += q_hits
+                    misses += q_miss
+                    per_hits[p] += q_hits
+                    per_miss[p] += q_miss
+                    touched_sets[p].update(int(u) for u in touched)
+                    per_proc[p] += 1
+                    completed[qid] = True
+                    assignment[qid] = p
+                    completion_round[qid] = r
+                    wait_rounds[qid] = r - qid // round_size
+
+            # drop-oldest admission control on the leftovers (FIFO order)
+            leftovers = [offered[i] for i in range(len(offered)) if assign[i] < 0]
+            n_over = max(len(leftovers) - backlog_capacity, 0)
+            for qid in leftovers[:n_over]:
+                dropped[qid] = True
+            backlog = leftovers[n_over:]
+            backlog_depth.append(len(backlog))
+            drops_per_round.append(n_over)
+            r += 1
+
+        total = hits + misses
+        return QueuedSimResult(
+            scheme=self.router.scheme if self.use_cache else "no_cache",
+            n_queries=Q,
+            n_rounds=r,
+            completed=completed,
+            dropped=dropped,
+            assignment=assignment,
+            completion_round=completion_round,
+            wait_rounds=wait_rounds,
+            backlog_depth=np.asarray(backlog_depth, np.int32),
+            drops_per_round=np.asarray(drops_per_round, np.int32),
+            offered_qids=offered_log,
+            per_proc_queries=per_proc,
+            per_proc_hits=per_hits,
+            per_proc_misses=per_miss,
+            touched_sets=touched_sets,
+            cache_hits=int(hits),
+            cache_misses=int(misses),
+            hit_rate=float(hits / total) if total else 0.0,
+        )
 
 # ---------------------------------------------------------------------------
 # Coupled-baseline simulator (SEDGE/Giraph & PowerGraph stand-in, Fig. 8)

@@ -1,11 +1,16 @@
 """Serving substrate: LM decode, DIN scoring, distributed graph-query serving."""
 
 from repro.serve.engine import (
+    AdmissionRound,
     EngineResult,
     EngineRunConfig,
+    QueueCarry,
     ServingEngine,
+    admission_dispatch,
     ema_round_update,
     make_retrying_multi_read,
     processor_round,
 )
-from repro.serve.graph_serving import GServeConfig, make_distributed_serve_step
+from repro.serve.graph_serving import (
+    GServeConfig, make_admission_round, make_distributed_serve_step,
+)

@@ -29,6 +29,12 @@ One serve step:
 Query->processor assignment happens OUTSIDE this step (repro.core.router /
 core.dispatch, with query stealing); the step consumes already-bucketed
 batches, which is how the paper's router/processor split works.
+`make_admission_round` below is that outside piece with carry-over
+admission: the SAME backlog-first route/dispatch/drop-oldest round the
+single-host engine scans over (`repro.serve.engine.admission_dispatch`),
+emitting the (n_proc, queries_per_proc) buckets this step consumes --
+so oversubscribed traffic flows through the mesh path with identical
+queueing semantics.
 
 `launch/dryrun.py` lowers this function for the `grouting` cell.
 """
@@ -46,9 +52,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import cache as cache_lib
+from repro.core.dispatch import BacklogState, gather_by_dispatch, make_backlog
 from repro.core.query_engine import EngineConfig
 from repro.serve.engine import (
-    ema_round_update, make_retrying_multi_read, processor_round,
+    AdmissionRound, admission_dispatch, ema_round_update,
+    make_retrying_multi_read, processor_round,
 )
 
 
@@ -163,6 +171,39 @@ def make_distributed_serve_step(mesh: Mesh, cfg: GServeConfig):
         return counts, ema, new_cache, stats
 
     return serve_step
+
+
+def make_admission_round(router, mesh: Mesh, cfg: GServeConfig,
+                         backlog_capacity: int, dispatch_rounds: int = 0):
+    """Host-side admission driver for the shard_map serve step.
+
+    Returns (admission_round, init_backlog): `admission_round(rstate,
+    backlog, fresh_node, fresh_qid)` runs ONE carry-over admission round --
+    backlog re-offered ahead of fresh arrivals, smart routing, bounded
+    dispatch with hard stealing, drop-oldest re-queue -- and buckets the
+    placed queries into the (n_proc, queries_per_proc) buffer
+    `make_distributed_serve_step`'s `queries` input expects. Identical
+    semantics to the single-host engine's scan body (shared
+    `admission_dispatch`), so the differential oracle covers this path too.
+    """
+    n_proc = n_processors(mesh)
+    assert router.P == n_proc, (router.P, n_proc)
+    n_rounds = dispatch_rounds if dispatch_rounds > 0 else n_proc
+
+    @jax.jit
+    def admission_round(rstate, backlog: BacklogState, fresh_node, fresh_qid
+                        ) -> Tuple[jax.Array, AdmissionRound]:
+        adm = admission_dispatch(
+            router, rstate, backlog, fresh_node, fresh_qid,
+            capacity=cfg.queries_per_proc, dispatch_rounds=n_rounds,
+        )
+        qbuf = gather_by_dispatch(
+            adm.offered_node, adm.dispatch, n_proc, cfg.queries_per_proc,
+            fill_value=-1,
+        )
+        return qbuf, adm
+
+    return admission_round, lambda: make_backlog(backlog_capacity)
 
 
 def make_processor_caches(mesh: Mesh, cfg: GServeConfig) -> dict:

@@ -1,0 +1,99 @@
+"""Golden-trace regression test for carry-over backlog evolution.
+
+In the style of test_router_golden.py: a fixed-seed graph and a fixed
+32-query stream pushed through a deliberately starved engine (3 processors
+x 1 slot vs 8 arrivals/round, ring of 6) produce a frozen per-round
+backlog/drop/completion trace. Any change to admission semantics -- offer
+order, drop-oldest policy, re-queue compaction, dispatch tie-breaking --
+flips pinned digits here and is therefore visible, and reviewable, in the
+diff. Update the goldens deliberately, never to silence a failure you
+can't explain.
+
+Hash routing keeps the trace platform-stable: routing is integer
+arithmetic, dispatch ties break on index, and BFS counts are exact.
+
+The trace doubles as behavioural documentation: the ring fills within two
+rounds (depth 5 -> 6), sheds the oldest waiters while saturated (drops
+4/5/5), then drains to empty in two service-only rounds; every query waits
+at most 2 rounds because anything older has been dropped.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.router import Router, RouterConfig
+from repro.core.serving import BallCache, ServingSimulator, SimRouter, SimRouterConfig
+from repro.core.storage import build_storage
+from repro.core.workloads import uniform_workload
+from repro.graph.csr import to_padded
+from repro.graph.generators import community_graph
+from repro.serve.engine import EngineRunConfig, ServingEngine
+
+P = 3
+
+GOLDEN_BACKLOG_DEPTH = [5, 6, 6, 6, 3, 0]
+GOLDEN_DROPS = [0, 4, 5, 5, 0, 0]
+GOLDEN_COMPLETION_ROUND = [
+    0, 0, 1, 1, -1, 0, -1, -1, -1, 2, 1, 2, 2, -1, -1, -1,
+    -1, -1, 3, 3, -1, -1, -1, -1, -1, 3, 4, 4, 5, 5, 4, 5,
+]
+GOLDEN_DROP_SET = {4, 6, 7, 8, 13, 14, 15, 16, 17, 20, 21, 22, 23, 24}
+GOLDEN_ASSIGNMENT = [
+    2, 1, 1, 2, -1, 0, -1, -1, -1, 1, 0, 2, 0, -1, -1, -1,
+    -1, -1, 1, 0, -1, -1, -1, -1, -1, 2, 1, 0, 1, 0, 2, 2,
+]
+
+
+@pytest.fixture(scope="module")
+def starved_cluster():
+    g = community_graph(n=360, community_size=40, intra_degree=5,
+                        inter_degree=1.0, seed=13)
+    tier = build_storage(to_padded(g, max_degree=int(g.degree().max())),
+                         n_shards=1)
+    wl = uniform_workload(g, n_queries=32, seed=21)
+    return g, tier, wl
+
+
+def _cfg():
+    return EngineRunConfig(
+        n_processors=P, round_size=8, capacity=1, hops=1, max_frontier=96,
+        cache_sets=128, cache_ways=4, chain_depth=2, backlog_capacity=6,
+    )
+
+
+def test_backlog_trace_frozen(starved_cluster):
+    g, tier, wl = starved_cluster
+    res, _ = ServingEngine(tier, Router(P, RouterConfig(scheme="hash")),
+                           _cfg()).run(wl)
+    np.testing.assert_array_equal(res.per_round["backlog_depth"],
+                                  GOLDEN_BACKLOG_DEPTH)
+    np.testing.assert_array_equal(res.per_round["n_dropped"], GOLDEN_DROPS)
+    np.testing.assert_array_equal(res.completion_round,
+                                  GOLDEN_COMPLETION_ROUND)
+    np.testing.assert_array_equal(res.assignment, GOLDEN_ASSIGNMENT)
+    assert res.drop_set() == GOLDEN_DROP_SET
+    # derived invariants the pinned trace must satisfy
+    assert res.peak_backlog == max(GOLDEN_BACKLOG_DEPTH)
+    assert res.n_dropped == sum(GOLDEN_DROPS) == len(GOLDEN_DROP_SET)
+    assert int(res.completed.sum()) == sum(
+        1 for r in GOLDEN_COMPLETION_ROUND if r >= 0)
+    # wait follows from completion round and arrival round (qid // 8)
+    expect_wait = [r - i // 8 if r >= 0 else -1
+                   for i, r in enumerate(GOLDEN_COMPLETION_ROUND)]
+    np.testing.assert_array_equal(res.wait_rounds, expect_wait)
+
+
+def test_backlog_trace_mirrored_by_simulator(starved_cluster):
+    """The same frozen trace must come out of the simulator's independent
+    round-based mirror (its own router, numpy dispatch, python backlog)."""
+    g, tier, wl = starved_cluster
+    rt = SimRouter(P, SimRouterConfig(scheme="hash"))
+    sim = ServingSimulator(g, P, rt, cache_entries=512, h=1,
+                           ball_cache=BallCache(g))
+    qres = sim.run_rounds(wl, round_size=8, capacity=1, backlog_capacity=6)
+    np.testing.assert_array_equal(qres.backlog_depth, GOLDEN_BACKLOG_DEPTH)
+    np.testing.assert_array_equal(qres.drops_per_round, GOLDEN_DROPS)
+    np.testing.assert_array_equal(qres.completion_round,
+                                  GOLDEN_COMPLETION_ROUND)
+    np.testing.assert_array_equal(qres.assignment, GOLDEN_ASSIGNMENT)
+    assert qres.drop_set() == GOLDEN_DROP_SET

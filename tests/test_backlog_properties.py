@@ -1,0 +1,164 @@
+"""Property tests: capacity_dispatch + carry-over backlog invariants.
+
+Runs through tests/_hypothesis_compat -- real hypothesis when installed,
+a deterministic fixed-seed sample otherwise (tier-1 has no hypothesis).
+
+The admission-queue safety contract, exercised here at three altitudes:
+
+  1. `backlog_admit` alone: placed / re-queued / dropped is an EXACT
+     partition of the offered queries -- nothing silently lost -- with FIFO
+     order preserved and drop-oldest eviction.
+  2. `capacity_dispatch` + `backlog_admit` composed over multiple rounds
+     (pure dispatch math, no engine): no query is ever assigned twice,
+     per-destination capacity is never exceeded.
+  3. the full jit ServingEngine under random oversubscription: the same
+     partition/capacity/uniqueness invariants on real scan output.
+
+Shapes are fixed per test (one jit compile); randomness lives in values.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.dispatch import (
+    backlog_admit, backlog_offer, capacity_dispatch, make_backlog,
+)
+
+M = 24  # offered-buffer width for the admit-only properties
+
+
+def _admit(leftover_bits, K):
+    leftover = np.array([b > 0 for b in leftover_bits], bool)
+    qid = np.arange(M, dtype=np.int32) * 10  # distinct, order-revealing ids
+    node = qid + 1
+    bl, dropped, depth, n_dropped = backlog_admit(
+        jnp.asarray(node), jnp.asarray(qid), jnp.asarray(leftover), K
+    )
+    return (leftover, qid, np.asarray(bl.qid), np.asarray(bl.node),
+            np.asarray(dropped), int(depth), int(n_dropped))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 1), min_size=M, max_size=M), st.integers(0, 10))
+def test_admit_partitions_exactly(leftover_bits, K):
+    """Every leftover is re-queued XOR dropped; non-leftovers are neither."""
+    leftover, qid, bq, bn, dropped, depth, n_dropped = _admit(leftover_bits, K)
+    V = int(leftover.sum())
+    assert n_dropped == max(V - K, 0)
+    assert depth == min(V, K)
+    assert int(dropped.sum()) == n_dropped
+    kept = set(bq[bq >= 0].tolist())
+    dropped_set = set(qid[dropped].tolist())
+    leftover_set = set(qid[leftover].tolist())
+    assert kept | dropped_set == leftover_set  # nothing silently lost
+    assert kept & dropped_set == set()  # nothing double-counted
+    assert (bq[depth:] == -1).all()  # ring stays front-packed
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 1), min_size=M, max_size=M), st.integers(0, 10))
+def test_admit_fifo_and_drop_oldest(leftover_bits, K):
+    """The ring keeps the NEWEST K leftovers in FIFO order; drops are
+    exactly the oldest V-K (qids here ascend with offer position)."""
+    leftover, qid, bq, bn, dropped, depth, n_dropped = _admit(leftover_bits, K)
+    order = qid[leftover]
+    np.testing.assert_array_equal(bq[:depth], order[n_dropped:])
+    np.testing.assert_array_equal(qid[dropped], order[:n_dropped])
+    np.testing.assert_array_equal(bn[:depth], bq[:depth] + 1)  # rows travel together
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 4), st.integers(0, 8),
+       st.integers(0, 10**6))
+def test_dispatch_backlog_rounds_never_lose_or_duplicate(P, cap, K, seed):
+    """Multi-round offer -> dispatch -> admit composition: every arrived
+    query is placed at most once; placed/backlogged/dropped partition the
+    arrivals; per-destination capacity holds every round."""
+    rng = np.random.default_rng(seed)
+    B = 8
+    n_rounds_total = 6
+    backlog = make_backlog(K)
+    placed_ever: set = set()
+    dropped_ever: set = set()
+    arrived: set = set()
+    for r in range(n_rounds_total):
+        fresh_node = rng.integers(0, 1000, B).astype(np.int32)
+        fresh_qid = (r * B + np.arange(B)).astype(np.int32)
+        arrived |= set(fresh_qid.tolist())
+        off_node, off_qid = backlog_offer(
+            backlog, jnp.asarray(fresh_node), jnp.asarray(fresh_qid))
+        valid = np.asarray(off_qid) >= 0
+        scores = rng.random((K + B, P)).astype(np.float32)
+        scores = np.where(valid[:, None], scores, np.inf)
+        d = capacity_dispatch(jnp.asarray(scores), capacity=cap, n_rounds=2)
+        a = np.asarray(d.assignment)
+        assert (np.asarray(d.counts) <= cap).all()
+        placed_now = [int(q) for q, ai in zip(np.asarray(off_qid), a)
+                      if ai >= 0 and q >= 0]
+        assert len(placed_now) == len(set(placed_now))
+        assert not (set(placed_now) & placed_ever), "query assigned twice"
+        placed_ever |= set(placed_now)
+        leftover = jnp.asarray(valid & (a < 0))
+        backlog, dropped, depth, n_dropped = backlog_admit(
+            off_node, off_qid, leftover, K)
+        dropped_now = set(np.asarray(off_qid)[np.asarray(dropped)].tolist())
+        assert not (dropped_now & placed_ever)
+        assert not (dropped_now & dropped_ever)
+        dropped_ever |= dropped_now
+    in_ring = set(np.asarray(backlog.qid)[np.asarray(backlog.qid) >= 0].tolist())
+    # exact conservation: placed + dropped + still-queued == arrived
+    assert placed_ever | dropped_ever | in_ring == arrived
+    assert (placed_ever & dropped_ever) == set()
+    assert (in_ring & (placed_ever | dropped_ever)) == set()
+
+
+@pytest.fixture(scope="module")
+def prop_engine_parts():
+    from repro.core.storage import build_storage
+    from repro.graph.csr import to_padded
+    from repro.graph.generators import community_graph
+
+    g = community_graph(n=400, community_size=40, intra_degree=5,
+                        inter_degree=1.0, seed=11)
+    tier = build_storage(to_padded(g, max_degree=int(g.degree().max())),
+                         n_shards=1)
+    return g, tier
+
+
+def test_engine_backlog_invariants_random_streams(prop_engine_parts):
+    """Full-engine property (fixed shapes = one compile; random streams):
+    partition exactness, per-round capacity, completed-mask contract."""
+    from repro.core.router import Router, RouterConfig
+    from repro.core.workloads import uniform_workload
+    from repro.serve.engine import EngineRunConfig, ServingEngine
+
+    g, tier = prop_engine_parts
+    P = 3
+    cfg = EngineRunConfig(
+        n_processors=P, round_size=12, capacity=2, hops=1, max_frontier=96,
+        cache_sets=64, cache_ways=4, chain_depth=2, backlog_capacity=10,
+    )
+    eng = ServingEngine(tier, Router(P, RouterConfig(scheme="hash")), cfg)
+    for seed in range(4):
+        wl = uniform_workload(g, n_queries=60, seed=seed)
+        res, _ = eng.run(wl)
+        Q = wl.query_nodes.size
+        # partition: completed XOR dropped covers every query (drained run)
+        assert res.final_backlog == 0
+        assert int(res.completed.sum()) + res.n_dropped == Q
+        assert not (res.completed & res.dropped).any()
+        # per-processor per-round capacity never exceeded
+        assert (res.per_round["per_proc"] <= cfg.capacity).all()
+        # no query served twice: each completed query has exactly one
+        # placement across all round logs
+        qid_f = res.per_round["offered_qid"].reshape(-1)
+        placed_f = res.per_round["placed"].reshape(-1)
+        placed_qids = qid_f[placed_f & (qid_f >= 0)]
+        assert placed_qids.size == np.unique(placed_qids).size
+        # explicit-mask contract
+        assert (res.counts[res.completed] >= 0).all()
+        assert (res.counts[~res.completed] == -1).all()
+        assert (res.wait_rounds[res.completed] >= 0).all()
+        assert (res.completion_round[~res.completed] == -1).all()

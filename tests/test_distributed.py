@@ -112,6 +112,86 @@ def test_grouting_device_serving_counts():
     assert float(np.asarray(stats2)[1]) < float(np.asarray(stats)[1])  # fewer misses
 
 
+def test_grouting_admission_round_oversubscribed():
+    """The shard_map path's admission driver: 1.5x-oversubscribed bursts
+    flow through the carry-over backlog into the (n_proc, queries_per_proc)
+    bucket the serve step consumes -- backlog offered ahead of fresh
+    arrivals (FIFO), drop-oldest on ring overflow, nothing silently lost,
+    and the served counts still match the BFS-ball oracle."""
+    from repro.core.router import Router, RouterConfig
+    from repro.core.serving import hhop_ball
+    from repro.core.storage import build_storage, make_serving_storage
+    from repro.serve.graph_serving import (
+        GServeConfig, make_admission_round, make_distributed_serve_step,
+        make_processor_caches,
+    )
+
+    g = powerlaw_graph(n=256, m=3, seed=0)
+    adj = to_padded(g, max_degree=8)
+    tier = build_storage(adj, n_shards=1)
+    mesh = _mesh11()
+    qpp, arrivals, ring = 8, 12, 6
+    cfg = GServeConfig(
+        n_nodes=g.n, n_rows=adj.n_rows, row_width=adj.max_degree,
+        n_storage_shards=1, queries_per_proc=qpp, hops=2, max_frontier=256,
+        cache_sets=128, cache_ways=4, read_capacity=512, chain_depth=24,
+    )
+    step = jax.jit(make_distributed_serve_step(mesh, cfg))
+    store = make_serving_storage(tier)
+    router = Router(1, RouterConfig(scheme="next_ready"))
+    rstate = router.init_state()
+    admission, init_backlog = make_admission_round(
+        router, mesh, cfg, backlog_capacity=ring)
+    backlog = init_backlog()
+
+    rng = np.random.default_rng(3)
+    stream = rng.integers(0, g.n, 3 * arrivals).astype(np.int32)
+    inputs = {
+        "rows": store["rows"], "deg": store["deg"], "cont": store["cont"],
+        "owner": store["owner"], "loc": store["loc"],
+        "coords": jnp.asarray(rng.standard_normal((g.n, cfg.embed_dim)).astype(np.float32)),
+        "ema": jnp.zeros((1, cfg.embed_dim), jnp.float32),
+        "cache": make_processor_caches(mesh, cfg),
+    }
+    expect_ring: list = []  # (qid, node) FIFO mirror
+    served = dropped = 0
+    for r in range(3):
+        fresh = stream[r * arrivals:(r + 1) * arrivals]
+        qids = (r * arrivals + np.arange(arrivals)).astype(np.int32)
+        qbuf, adm = admission(rstate, backlog, jnp.asarray(fresh),
+                              jnp.asarray(qids))
+        rstate, backlog = adm.rstate, adm.backlog
+        # FIFO contract: with one processor the first qpp offers (ring
+        # first, then fresh) are placed, the rest re-queue / drop oldest
+        offer = expect_ring + list(zip(qids.tolist(), fresh.tolist()))
+        placed_exp, rest = offer[:qpp], offer[qpp:]
+        expect_ring = rest[max(len(rest) - ring, 0):]
+        placed = np.asarray(adm.placed)
+        assert int(placed.sum()) == len(placed_exp)
+        np.testing.assert_array_equal(
+            np.asarray(adm.offered_qid)[placed],
+            [q for q, _ in placed_exp])
+        np.testing.assert_array_equal(
+            np.asarray(adm.backlog.qid)[np.asarray(adm.backlog.qid) >= 0],
+            [q for q, _ in expect_ring])
+        assert int(adm.n_dropped) == len(rest) - len(expect_ring)
+        served += int(placed.sum())
+        dropped += int(adm.n_dropped)
+        # bucket contents: exactly the placed nodes, in dispatch-slot order
+        qbuf = np.asarray(qbuf)
+        assert qbuf.shape == (1, qpp)
+        np.testing.assert_array_equal(qbuf[0], [n for _, n in placed_exp])
+        with mesh:
+            counts, ema, cache, stats = step(dict(inputs, queries=qbuf))
+        inputs["cache"], inputs["ema"] = cache, ema
+        for i, q in enumerate(qbuf[0]):
+            _, result = hhop_ball(g, int(q), cfg.hops)
+            assert np.asarray(counts)[0, i] == result - 1
+    # conservation across the bursts: nothing silently lost
+    assert served + dropped + len(expect_ring) == 3 * arrivals
+    assert dropped > 0 and len(expect_ring) == ring
+
+
 def test_logical_rules_divisibility_fallback():
     from repro.distributed.mesh_utils import resolve_pspec, set_mesh_rules
 

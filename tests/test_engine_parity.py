@@ -21,6 +21,19 @@ Steal-parity configuration: per-round slot capacity is constrained so
 dispatch-level hard stealing fires; execution parity must still hold under
 the stolen placement, and the engine's load balance must beat the sticky
 no-steal placement.
+
+Queue-parity configuration: arrivals at 2x the processors' round capacity
+(B fresh queries vs P*C = B/2 slots), with a bounded carry-over backlog and
+drop-oldest admission. The engine scan and the simulator's round-based
+mirror (`run_rounds`) implement the same semantics independently (jnp scan
++ scatter compaction vs python lists + a numpy dispatch mirror); they must
+agree on per-round backlog depth, per-query completion round, drop sets,
+executed placement, cache-touch sets and storage reads. Routing decisions
+are replayed from the engine's recorded per-round router assignments (the
+same injection `run(assignments=...)` does for the drained oracle) so
+float-width differences in landmark/embed scoring cannot mask a queueing
+bug; the hash scheme is ADDITIONALLY tested fully independently (integer
+routing), with the simulator routing for itself.
 """
 
 import numpy as np
@@ -101,8 +114,11 @@ def test_engine_simulator_exact_parity(cluster, scheme, wl_name):
     eng = cluster["engines"][scheme]
     res, _ = eng.run(wl)
 
-    # engine sanity: capacity == round_size means dispatch never steals
+    # engine sanity: capacity == round_size means dispatch never steals and
+    # every round drains (completed mask full, nothing queued or dropped)
     assert res.unplaced == 0 and res.stolen == 0 and not res.truncated
+    assert res.completed.all() and res.n_dropped == 0 and res.peak_backlog == 0
+    assert (res.wait_rounds == 0).all()
     np.testing.assert_array_equal(res.assignment, res.router_assignment)
 
     # per-query results vs the BFS ball oracle
@@ -134,6 +150,115 @@ def test_engine_simulator_exact_parity(cluster, scheme, wl_name):
     assert res.touched - res.reads == sres.cache_hits
 
 
+# ---------------------------------------------------------------------------
+# oversubscribed traffic: carry-over backlog + drop-oldest admission parity
+# ---------------------------------------------------------------------------
+
+OVER_CAP = ROUND // (2 * P)  # P*C = B/2: 2x oversubscription
+OVER_BACKLOG = 48
+
+
+@pytest.fixture(scope="module")
+def over_engines(cluster):
+    cfg = EngineRunConfig(
+        n_processors=P, round_size=ROUND, capacity=OVER_CAP, hops=HOPS,
+        max_frontier=256, cache_sets=SETS, cache_ways=WAYS, chain_depth=2,
+        backlog_capacity=OVER_BACKLOG, track_touched=True,
+    )
+    return {
+        scheme: ServingEngine(cluster["tier"], cluster["engines"][scheme].router, cfg)
+        for scheme in SCHEMES
+    }
+
+
+def _replay_route_fn(res):
+    """Replay the engine's per-round router picks by offer position,
+    asserting the simulator offered exactly the same queries."""
+    offered = res.per_round["offered_qid"]
+    r_assign = res.per_round["router_assignment"]
+
+    def route_fn(r, qids, nodes, load):
+        valid_pos = np.flatnonzero(offered[r] >= 0)
+        np.testing.assert_array_equal(
+            offered[r][valid_pos], qids,
+            err_msg=f"round {r}: simulator offered a different query set",
+        )
+        return r_assign[r][valid_pos]
+
+    return route_fn
+
+
+def _assert_queue_parity(res, qres, P):
+    R = qres.n_rounds
+    np.testing.assert_array_equal(qres.backlog_depth,
+                                  res.per_round["backlog_depth"][:R])
+    assert (res.per_round["backlog_depth"][R:] == 0).all()
+    np.testing.assert_array_equal(qres.drops_per_round,
+                                  res.per_round["n_dropped"][:R])
+    np.testing.assert_array_equal(qres.completed, res.completed)
+    np.testing.assert_array_equal(qres.dropped, res.dropped)
+    assert qres.drop_set() == res.drop_set()
+    np.testing.assert_array_equal(qres.completion_round, res.completion_round)
+    np.testing.assert_array_equal(qres.wait_rounds, res.wait_rounds)
+    np.testing.assert_array_equal(qres.assignment, res.assignment)
+    np.testing.assert_array_equal(qres.per_proc_queries, res.per_proc_queries)
+    np.testing.assert_array_equal(qres.per_proc_misses, res.per_proc_reads)
+    etouch = res.touch_sets()
+    for p in range(P):
+        assert etouch[p] == qres.touched_sets[p], p
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("wl_name", ["uniform", "hotspot", "drifting", "antilocality"])
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_engine_simulator_queue_parity(cluster, over_engines, scheme, wl_name):
+    """2x-oversubscribed arrivals: the jit scan's backlog ring and the
+    round-based python mirror must evolve identically -- backlog depth per
+    round, completion round per query, drop sets, placement, touch sets."""
+    g = cluster["g"]
+    wl = _workload(g, wl_name)
+    res, _ = over_engines[scheme].run(wl)
+
+    # overload sanity: the ring actually absorbed overflow and drained
+    assert res.peak_backlog > 0 and res.final_backlog == 0
+    assert not res.truncated
+    assert int(res.completed.sum()) + res.n_dropped == wl.query_nodes.size
+    # the explicit-mask contract: counts trustworthy iff completed
+    assert (res.counts[res.completed] >= 0).all()
+    assert (res.counts[~res.completed] == -1).all()
+    assert not (res.completed & res.dropped).any()
+
+    # per-query results vs the BFS ball oracle (completed queries only)
+    balls = cluster["balls"]
+    for i in np.nonzero(res.completed)[0]:
+        _, result_size = balls.get(int(wl.query_nodes[i]), HOPS)
+        assert res.counts[i] == result_size - 1, (i, int(wl.query_nodes[i]))
+
+    sim = _oracle_sim(cluster, scheme, steal=False)
+    qres = sim.run_rounds(
+        wl, round_size=ROUND, capacity=OVER_CAP,
+        backlog_capacity=OVER_BACKLOG, route_fn=_replay_route_fn(res),
+    )
+    _assert_queue_parity(res, qres, P)
+
+
+@pytest.mark.slow
+def test_engine_queue_parity_independent_hash(cluster, over_engines):
+    """Hash routing is integer arithmetic: the simulator can route for
+    itself (no replay), making engine and mirror FULLY independent -- the
+    strongest form of the queue-aware oracle."""
+    g = cluster["g"]
+    wl = _workload(g, "uniform")
+    res, _ = over_engines["hash"].run(wl)
+    assert res.n_dropped > 0  # drop-oldest admission genuinely exercised
+
+    sim = _oracle_sim(cluster, "hash", steal=False)
+    qres = sim.run_rounds(
+        wl, round_size=ROUND, capacity=OVER_CAP, backlog_capacity=OVER_BACKLOG,
+    )
+    _assert_queue_parity(res, qres, P)
+
+
 @pytest.mark.slow
 def test_engine_parity_under_hard_stealing(cluster):
     """Constrained slots force dispatch-level stealing; execution parity must
@@ -149,7 +274,7 @@ def test_engine_parity_under_hard_stealing(cluster):
         track_touched=True,
     )
     eng = ServingEngine(cluster["tier"], router, cfg)
-    res, (rstate, _, _) = eng.run(wl)
+    res, (rstate, _, _, _) = eng.run(wl)
     assert res.unplaced == 0 and not res.truncated
     assert res.stolen > 0  # two hot nodes hash to <= 2 procs; 20 > 7 slots
     # acks target the router-chosen processor: even under heavy stealing the
@@ -225,8 +350,10 @@ def test_antilocality_workload_properties(small_g):
 
 
 def test_unplaced_queries_marked_not_zero(small_g):
-    """With steal exhausted (one dispatch pass, tiny capacity) overflow
-    queries stay unplaced; their counts must read -1, never a plausible 0."""
+    """With steal exhausted (one dispatch pass, tiny capacity) and no
+    backlog, overflow queries are dropped; the EXPLICIT `completed` mask
+    must gate every per-query field, and counts must read -1, never a
+    plausible 0 (the old sentinel-leak footgun)."""
     g = small_g
     tier = build_storage(to_padded(g, max_degree=int(g.degree().max())), n_shards=1)
     router = Router(P, RouterConfig(scheme="hash", steal_margin=1e9))
@@ -237,8 +364,14 @@ def test_unplaced_queries_marked_not_zero(small_g):
     wl = concentrated_workload(g, n_hotspots=1, reps=20, seed=3)
     res, _ = ServingEngine(tier, router, cfg).run(wl)
     assert res.unplaced > 0  # 20 identical queries, 5 slots, no second pass
-    assert (res.counts[res.assignment < 0] == -1).all()
-    assert (res.counts[res.assignment >= 0] >= 0).all()
+    # the explicit-mask contract replaces counts==-1 sniffing
+    np.testing.assert_array_equal(res.completed, res.assignment >= 0)
+    # backlog_capacity=0: every unplaced query is dropped immediately
+    np.testing.assert_array_equal(res.dropped, ~res.completed)
+    assert res.n_dropped == res.unplaced and res.peak_backlog == 0
+    assert (res.completion_round[~res.completed] == -1).all()
+    assert (res.counts[~res.completed] == -1).all()
+    assert (res.counts[res.completed] >= 0).all()
 
 
 def test_antilocality_defeats_caching(small_g):

@@ -1,0 +1,111 @@
+"""Interpret-mode parity for the Pallas `frontier_expand` TPU kernel.
+
+The engine's jnp path lowers `kernels.ref.frontier_expand_ref`; the Pallas
+kernel (compare-reduce over node blocks, DESIGN.md §6) must be semantically
+identical. `interpret=True` runs the kernel's exact program on CPU, so the
+grid/BlockSpec/padding logic is covered without TPU hardware.
+
+The sweep targets the padding seams specifically: n % BN != 0 (the visited
+bitmap is padded up to a whole node block and sliced back), F % BF != 0
+(frontier rows padded with -1 / deg 0), n < BN and F < BF (block size
+clamped to the array), plus the degenerate inputs the engine actually
+produces (all-(-1) drained frontiers, deg == 0 rows, deg == W full rows).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.frontier import DEFAULT_BF, DEFAULT_BN
+from repro.kernels.frontier import frontier_expand as frontier_pallas
+
+
+def _case(F, W, n, seed, frac_pad=0.1, frac_visited=0.3):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, n, (F, W)).astype(np.int32)
+    deg = rng.integers(0, W + 1, F).astype(np.int32)
+    rows[rng.random((F, W)) < frac_pad] = -1
+    visited = rng.random(n) < frac_visited
+    return rows, deg, visited
+
+
+def _check(rows, deg, visited, **kw):
+    out = frontier_pallas(jnp.asarray(rows), jnp.asarray(deg),
+                          jnp.asarray(visited), interpret=True, **kw)
+    expect = ref.frontier_expand_ref(jnp.asarray(rows), jnp.asarray(deg),
+                                     jnp.asarray(visited))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+    return np.asarray(out)
+
+
+# every (F, n) pair here hits a distinct padding seam for bf=32, bn=128
+PAD_CASES = [
+    (32, 4, 128, "aligned"),          # exact blocks (control)
+    (32, 4, 129, "n % bn == 1"),      # one node past the block edge
+    (32, 4, 255, "n % bn == bn-1"),   # block nearly full
+    (33, 4, 128, "F % bf == 1"),      # one frontier row past the edge
+    (31, 8, 500, "F < bf, n % bn"),   # both dims clamp + pad
+    (7, 3, 50, "tiny: F < bf, n < bn"),
+    (130, 16, 513, "both ragged"),
+]
+
+
+@pytest.mark.parametrize("F,W,n,label", PAD_CASES)
+def test_frontier_padding_edges_vs_ref(F, W, n, label):
+    rows, deg, visited = _case(F, W, n, seed=F * 1000 + n)
+    _check(rows, deg, visited, bf=32, bn=128)
+
+
+def test_frontier_default_blocks_ragged_n():
+    """Default BF/BN with n % DEFAULT_BN != 0 -- the shape the engine uses
+    on real graphs (n is never a multiple of 512)."""
+    n = DEFAULT_BN * 2 + 77
+    rows, deg, visited = _case(DEFAULT_BF + 5, 8, n, seed=0)
+    _check(rows, deg, visited)
+
+
+def test_frontier_padding_region_stays_clean():
+    """Neighbors never mark the padded tail: outputs past n are sliced off,
+    and no in-range node flips due to the pad block."""
+    n, F, W = 130, 8, 4  # pads up to 256 for bn=128
+    rows = np.full((F, W), n - 1, np.int32)  # all point at the last node
+    deg = np.full(F, W, np.int32)
+    visited = np.zeros(n, bool)
+    out = _check(rows, deg, visited, bf=8, bn=128)
+    assert out.shape == (n,)
+    assert out[n - 1] and out[:n - 1].sum() == 0
+
+
+def test_frontier_drained_and_zero_degree():
+    """All-(-1) frontiers (a drained query) and deg==0 rows mark nothing."""
+    n = 100
+    rows = np.full((16, 4), -1, np.int32)
+    deg = np.zeros(16, np.int32)
+    visited = np.zeros(n, bool)
+    out = _check(rows, deg, visited, bf=8, bn=64)
+    assert out.sum() == 0
+    # deg == 0 must mask even non-(-1) row contents (stale slots)
+    rows2 = np.full((16, 4), 7, np.int32)
+    out2 = _check(rows2, deg, visited, bf=8, bn=64)
+    assert out2.sum() == 0
+
+
+def test_frontier_deg_clips_row_width():
+    """Only the first deg[i] entries of a row are neighbors; the tail is
+    stale storage padding and must not leak."""
+    n = 64
+    rows = np.array([[1, 2, 3, 4]], np.int32)
+    deg = np.array([2], np.int32)
+    visited = np.zeros(n, bool)
+    out = _check(rows, deg, visited, bf=1, bn=64)
+    assert set(np.nonzero(out)[0].tolist()) == {1, 2}
+
+
+def test_frontier_monotone_and_idempotent():
+    """visited only grows, and re-expanding the same frontier is a no-op."""
+    rows, deg, visited = _case(24, 6, 200, seed=3)
+    out1 = _check(rows, deg, visited, bf=16, bn=128)
+    assert (out1 | visited == out1).all()
+    out2 = _check(rows, deg, out1, bf=16, bn=128)
+    np.testing.assert_array_equal(out1, out2)
