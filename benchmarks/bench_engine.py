@@ -15,13 +15,23 @@ steady-state backlog must be nonzero (the queue is genuinely absorbing the
 overload, not silently dropping it) and drop-oldest admission accounts for
 every query that doesn't complete.
 
+`--backend` selects the frontier-expansion backend(s) the engine runs
+(comma-separated: scatter | pallas | pallas-interpret | auto |
+auto-interpret). With more than one backend the scheme x workload table is
+reported PER BACKEND -- qps is the only column allowed to move: hit rates,
+read volumes and load balance are backend invariants and the bench fails
+if they drift.
+
 Validations: smart routing (landmark/embed) must beat naive (next_ready)
 on cache hit rate under hotspot traffic, no scheme may gain real hit rate
-on the anti-locality stream, and the overload run must show a nonzero
-steady-state backlog with completed + dropped == offered.
+on the anti-locality stream, the overload run must show a nonzero
+steady-state backlog with completed + dropped == offered, and multi-backend
+runs must agree on every non-timing stat.
 """
 
 from __future__ import annotations
+
+import argparse
 
 from benchmarks.common import bench_graph, preprocess, print_table
 from repro.core.router import Router, RouterConfig
@@ -49,14 +59,14 @@ def _workloads(g, n_queries):
     }
 
 
-def _overload_bench(g, li, ge, tier, n_queries: int):
+def _overload_bench(g, li, ge, tier, n_queries: int, backend: str = "scatter"):
     """Sustained 2x oversubscription: B arrivals/round vs P*C = B/2 service
     slots, absorbed by the carry-over backlog (then drained)."""
     B = 32
     cfg = EngineRunConfig(
         n_processors=P, round_size=B, capacity=B // (2 * P), hops=2,
         max_frontier=384, cache_sets=1024, cache_ways=8, chain_depth=2,
-        backlog_capacity=2 * B,
+        backlog_capacity=2 * B, expand_backend=backend,
     )
     wl = uniform_workload(g, n_queries=n_queries, seed=4)
     arrival_rounds = -(-n_queries // B)
@@ -83,53 +93,78 @@ def _overload_bench(g, li, ge, tier, n_queries: int):
     return ok
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, backends=("scatter",)):
     n = 2400 if quick else 4800
     n_queries = 128 if quick else 256
     g = bench_graph(n=n)
     li, ge, _, _ = preprocess(g, P, n_landmarks=24, dim=8)
     adj = to_padded(g, max_degree=int(g.degree().max()))
     tier = build_storage(adj, n_shards=P)
-    cfg = EngineRunConfig(
-        n_processors=P, round_size=32, capacity=32, hops=2, max_frontier=384,
-        cache_sets=1024, cache_ways=8, chain_depth=2,
-    )
     wls = _workloads(g, n_queries)
 
     rows = []
     hit = {}
-    for scheme in SCHEMES:
-        router = Router(P, RouterConfig(scheme=scheme), landmark_index=li,
-                        embedding=ge, seed=3)
-        eng = ServingEngine(tier, router, cfg)
-        for wname, wl in wls.items():
-            eng.run(wl)  # warm-up: compile + trace caches
-            res, _ = eng.run(wl)
-            rows.append(dict(scheme=scheme, workload=wname,
-                             qps=res.throughput_qps, hit_rate=res.hit_rate,
-                             reads=res.reads, imbalance=res.load_imbalance,
-                             stolen=res.stolen))
-            hit[(scheme, wname)] = res.hit_rate
-    print_table("engine end-to-end (measured wall-clock)", rows)
+    inv = {}  # (scheme, workload) -> backend-invariant stat tuple
+    drifted = []  # backend-invariance violations (reported after the table)
+    for backend in backends:
+        cfg = EngineRunConfig(
+            n_processors=P, round_size=32, capacity=32, hops=2,
+            max_frontier=384, cache_sets=1024, cache_ways=8, chain_depth=2,
+            expand_backend=backend,
+        )
+        for scheme in SCHEMES:
+            router = Router(P, RouterConfig(scheme=scheme), landmark_index=li,
+                            embedding=ge, seed=3)
+            eng = ServingEngine(tier, router, cfg)
+            for wname, wl in wls.items():
+                eng.run(wl)  # warm-up: compile + trace caches
+                res, _ = eng.run(wl)
+                rows.append(dict(backend=backend, scheme=scheme,
+                                 workload=wname, qps=res.throughput_qps,
+                                 hit_rate=res.hit_rate, reads=res.reads,
+                                 imbalance=res.load_imbalance,
+                                 stolen=res.stolen))
+                hit[(backend, scheme, wname)] = res.hit_rate
+                key = (scheme, wname)
+                stats = (res.hit_rate, res.reads, res.touched,
+                         int(res.completed.sum()))
+                if key in inv and inv[key] != stats:
+                    drifted.append((backend, key, stats, inv[key]))
+                inv.setdefault(key, stats)
+    print_table("engine end-to-end (measured wall-clock, per backend)", rows)
+    ok4 = not drifted
+    if len(backends) > 1:
+        print(f"[validate] hit rates / read volumes identical across "
+              f"backends {','.join(backends)} -> {'OK' if ok4 else 'FAIL'}")
+        for backend, key, stats, expect in drifted:
+            print(f"  drift: backend {backend} {key}: {stats} != {expect}")
 
-    ok3 = _overload_bench(g, li, ge, tier, n_queries)
+    b0 = backends[0]
+    ok3 = _overload_bench(g, li, ge, tier, n_queries, backend=b0)
 
-    smart = max(hit[("landmark", "hotspot")], hit[("embed", "hotspot")])
-    naive = hit[("next_ready", "hotspot")]
+    smart = max(hit[(b0, "landmark", "hotspot")], hit[(b0, "embed", "hotspot")])
+    naive = hit[(b0, "next_ready", "hotspot")]
     ok1 = smart > naive
     print(f"[validate] smart beats naive routing on hotspot hit rate: "
           f"{smart:.3f} > {naive:.3f} -> {'OK' if ok1 else 'FAIL'}")
-    anti_best = max(hit[(s, "anti_locality")] for s in SCHEMES)
-    hot_best = max(hit[(s, "hotspot")] for s in SCHEMES)
+    anti_best = max(hit[(b0, s, "anti_locality")] for s in SCHEMES)
+    hot_best = max(hit[(b0, s, "hotspot")] for s in SCHEMES)
     ok2 = anti_best < hot_best
     print(f"[validate] anti-locality defeats caching for every scheme: "
           f"best {anti_best:.3f} < hotspot best {hot_best:.3f} -> "
           f"{'OK' if ok2 else 'FAIL'}")
     print(f"[validate] 2x overload sustains a nonzero steady-state backlog "
           f"and accounts for every query -> {'OK' if ok3 else 'FAIL'}")
-    if not (ok1 and ok2 and ok3):
+    if not (ok1 and ok2 and ok3 and ok4):
         raise AssertionError("engine bench validation failed")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--backend", default="scatter",
+                    help="comma-separated expansion backends to bench "
+                         "(scatter | pallas | pallas-interpret | auto | "
+                         "auto-interpret)")
+    args = ap.parse_args()
+    main(quick=args.quick, backends=tuple(args.backend.split(",")))

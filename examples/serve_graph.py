@@ -13,7 +13,12 @@ over between bursts through the bounded admission backlog
 single-host engine scans over), and once arrivals stop the backlog drains
 through arrival-free bursts -- continuous batching on the mesh path.
 
-    PYTHONPATH=src python examples/serve_graph.py [--bursts 8]
+    PYTHONPATH=src python examples/serve_graph.py [--bursts 8] \
+        [--backend scatter|pallas|auto]
+
+`--backend` selects the frontier-expansion backend the per-device engine
+step runs (the Pallas compare-reduce kernel vs the XLA scatter reference,
+or the per-hop density `auto` switch); results are backend-invariant.
 """
 
 import argparse
@@ -44,6 +49,11 @@ def main():
     ap.add_argument("--nodes", type=int, default=4000)
     ap.add_argument("--hops", type=int, default=2)
     ap.add_argument("--backlog", type=int, default=64)
+    ap.add_argument("--backend", default="scatter",
+                    choices=["scatter", "pallas", "pallas-interpret",
+                             "auto", "auto-interpret"],
+                    help="frontier-expansion backend (pallas/auto fall back "
+                         "to the kernel interpreter off-TPU)")
     args = ap.parse_args()
 
     g = powerlaw_graph(n=args.nodes, m=6, seed=0)
@@ -65,8 +75,9 @@ def main():
         n_nodes=g.n, n_rows=adj.n_rows, row_width=adj.max_degree,
         n_storage_shards=1, queries_per_proc=qpp, hops=args.hops,
         max_frontier=1024, cache_sets=2048, cache_ways=4,
-        read_capacity=4096, chain_depth=8,
+        read_capacity=4096, chain_depth=8, expand_backend=args.backend,
     )
+    print(f"expansion backend: {args.backend}")
     step = jax.jit(make_distributed_serve_step(mesh, cfg))
     store = make_serving_storage(tier)
 

@@ -12,13 +12,36 @@ Per hop (== one iteration of Algorithm 5's while loop):
   1. probe cache for all frontier rows                  (lines 6-12)
   2. multi_read the misses from storage, insert to cache (lines 17-27)
   3. follow continuation chains (bounded depth)
-  4. scatter neighbors into `visited`; next frontier = newly visited nodes
+  4. mark neighbors in `visited`; next frontier = newly visited nodes
      (`nonzero(size=F)` keeps shapes static; overflow beyond F is recorded
      in `truncated` -- with F sized to the h-hop ball this never triggers)
 
+Step 4 -- the visited-bitmap update, the per-round hot loop -- is a
+pluggable EXPANSION BACKEND (`EngineConfig.expand_backend`), one protocol
+with two implementations plus a selector:
+
+  - "scatter": the XLA `.at[].max()` dense scatter (reference backend;
+    wins for sparse frontiers / CPU);
+  - "pallas": ONE `kernels.frontier.frontier_expand_batched` compare-reduce
+    launch expands the whole batch, grid (query, node-block,
+    frontier-block) -- scatter-free, the TPU path ("pallas-interpret" runs
+    the identical kernel program via the interpreter on CPU);
+  - "auto": `lax.cond` on `kernels.frontier.dense_frontier` per hop --
+    dense frontiers take the kernel, sparse ones the scatter. (Under the
+    single-host engine's vmap over processors the cond's predicate is
+    batched and XLA evaluates both branches then selects; inside shard_map
+    the predicate is per-device and the cond stays a real branch.)
+
+Every backend must keep the engine<->simulator differential oracle exactly
+green: touch sets, read volumes, and backlog evolution are backend
+INVARIANTS (`tests/test_engine_parity.py` parametrizes over backends, and
+`tests/test_expand_backends.py` sweeps the backends against each other
+across frontier/bitmap shapes).
+
 Three query types (paper §2.2) share the BFS core:
   - h-hop neighbor aggregation: |visited| - 1 (or label histogram)
-  - h-step random walk with restart: separate light-weight walker
+  - h-step random walk with restart: separate light-weight walker (reads
+    rows, never expands -- untouched by the backend choice)
   - h-hop reachability: bi-directional BFS, bitmap intersection
 """
 
@@ -35,6 +58,8 @@ import numpy as np
 from repro.core import cache as cache_lib
 from repro.core.cache import CacheState
 from repro.core.storage import StorageTier, multi_read_ref
+from repro.kernels.frontier import dense_frontier, frontier_expand_batched
+from repro.kernels.ops import on_tpu
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +69,13 @@ class EngineConfig:
     #                         the chain loop exits as soon as no row has a
     #                         continuation, so typical cost is 1-2 iterations)
     use_cache: bool = True
+    # frontier-expansion backend: how step 4 (neighbors -> visited bitmap)
+    # executes. One of EXPAND_BACKENDS: "scatter" (XLA .at[].max, the
+    # reference), "pallas" (batched compare-reduce kernel, one launch per
+    # hop), "auto" (lax.cond on frontier density per hop), or the
+    # "-interpret" variants that force the Pallas interpreter (CPU tests).
+    # Semantics are backend-invariant; only the execution strategy changes.
+    expand_backend: str = "scatter"
     # when the engine runs INSIDE shard_map and multi_read contains
     # collectives (all_to_all), every participant must run the same number of
     # chain iterations: the loop condition is then psum'd over these axes.
@@ -133,6 +165,67 @@ def _read_rows(
     return rows, deg, cont, cache_state, n_probe_miss, n_reads, n_touch
 
 
+# ---------------------------------------------------------------------------
+# Frontier-expansion backends: the pluggable step-4 seam.
+#
+# Protocol: fn(rows (B, F, W) int32, deg (B, F) int32, mask (B, n) bool)
+# -> mask' with every valid neighbor marked. Valid = row id >= 0, within the
+# row's degree, and < n (continuation-row ids >= n are engine-internal and
+# never enter the bitmap). All backends are semantically identical; the
+# engine<->simulator oracle must stay green under any of them.
+# ---------------------------------------------------------------------------
+
+EXPAND_BACKENDS = ("scatter", "pallas", "pallas-interpret", "auto", "auto-interpret")
+
+
+def _scatter_expand(rows_b: jax.Array, deg_b: jax.Array, mask: jax.Array,
+                    n: int) -> jax.Array:
+    """Reference backend: dense per-query scatter via XLA `.at[].max()`."""
+    B, F, W = rows_b.shape
+    width_ok = jnp.arange(W)[None, None, :] < deg_b[:, :, None]
+    nbr_valid = (rows_b >= 0) & width_ok & (rows_b < n)
+    flat_nbrs = jnp.where(nbr_valid, rows_b, 0).reshape(B, F * W)
+    flat_ok = nbr_valid.reshape(B, F * W)
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, F * W))
+    return mask.at[bidx, flat_nbrs].max(flat_ok)
+
+
+def _pallas_expand(rows_b: jax.Array, deg_b: jax.Array, mask: jax.Array,
+                   n: int, interpret: bool) -> jax.Array:
+    """Batched compare-reduce kernel: one launch expands the whole batch.
+
+    Row ids >= n (continuation rows / out-of-range) are masked to -1 pad
+    before the kernel; width masking rides the kernel's own deg clip.
+    """
+    rows_in = jnp.where(rows_b < n, rows_b, -1)
+    return frontier_expand_batched(rows_in, deg_b, mask, interpret=interpret)
+
+
+def get_expand_backend(name: str, n: int) -> Callable:
+    """Resolve a backend name to the protocol callable (python-static).
+
+    "pallas"/"auto" pick interpret mode automatically off-TPU so the same
+    config runs everywhere; "-interpret" forces it (CI's CPU kernel path).
+    """
+    if name not in EXPAND_BACKENDS:
+        raise ValueError(f"unknown expand_backend {name!r}; one of {EXPAND_BACKENDS}")
+    if name == "scatter":
+        return functools.partial(_scatter_expand, n=n)
+    interpret = name.endswith("-interpret") or not on_tpu()
+    if name.startswith("pallas"):
+        return functools.partial(_pallas_expand, n=n, interpret=interpret)
+
+    def auto(rows_b, deg_b, mask):
+        return jax.lax.cond(
+            dense_frontier(deg_b, n),
+            lambda r, d, m: _pallas_expand(r, d, m, n=n, interpret=interpret),
+            lambda r, d, m: _scatter_expand(r, d, m, n=n),
+            rows_b, deg_b, mask,
+        )
+
+    return auto
+
+
 def expand_hop(
     tier_arrays,
     cache_state: CacheState,
@@ -142,9 +235,13 @@ def expand_hop(
     multi_read: Callable,
     n: int,
 ) -> HopResult:
-    """One BFS hop for a batch of queries sharing one processor cache."""
+    """One BFS hop for a batch of queries sharing one processor cache.
+
+    The visited-bitmap update delegates to the expansion backend selected
+    by `cfg.expand_backend` (resolved once, python-static)."""
     B, F = frontier.shape
     W = cache_state.row_width
+    expand_fn = get_expand_backend(cfg.expand_backend, n)
 
     def _global_any(flag: jax.Array) -> jax.Array:
         """Uniform loop decision: when multi_read contains collectives, every
@@ -161,15 +258,8 @@ def expand_hop(
         reads_total = reads_total + n_reads
         touch_total = touch_total + n_touch
         probe_total = probe_total + n_probe_miss
-        rows_b = rows.reshape(B, F, W)
-        deg_b = deg.reshape(B, F)
-        width_ok = jnp.arange(W)[None, None, :] < deg_b[:, :, None]
-        nbr_valid = (rows_b >= 0) & width_ok & (rows_b < n)
-        flat_nbrs = jnp.where(nbr_valid, rows_b, 0).reshape(B, F * W)
-        flat_ok = nbr_valid.reshape(B, F * W)
-        # scatter into per-query delta bitmap
-        bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, F * W))
-        new_mask = new_mask.at[bidx, flat_nbrs].max(flat_ok)
+        # mark neighbors in the per-query delta bitmap (pluggable backend)
+        new_mask = expand_fn(rows.reshape(B, F, W), deg.reshape(B, F), new_mask)
         # continuation rows (hub nodes whose adjacency spans multiple rows)
         # are drained in the same hop, as in Algorithm 5's per-hop multi_read
         cont_flat = cont.reshape(-1)
@@ -215,6 +305,10 @@ class QueryStats:
     miss counters, so duplicates within one batched probe each count);
     `reads` counts unique rows actually fetched from storage after intra-
     batch read combining -- the true storage read volume.
+
+    `truncated_fwd`/`truncated_bwd` are only populated by `run_reachability`
+    (per-direction detail of its bi-directional BFS: `truncated` is their
+    OR); every other query type leaves them None.
     """
 
     touched: jax.Array  # rows needed across hops (hits+misses)
@@ -222,6 +316,8 @@ class QueryStats:
     result_sizes: jax.Array  # (B,) |N_h(q)|
     truncated: jax.Array  # (B,) bool
     reads: jax.Array  # unique storage rows fetched
+    truncated_fwd: Optional[jax.Array] = None  # (B,) bool, reachability only
+    truncated_bwd: Optional[jax.Array] = None  # (B,) bool, reachability only
 
 
 def run_neighbor_aggregation(
@@ -362,6 +458,8 @@ def run_reachability(
         result_sizes=jnp.sum(vis_f | vis_b, 1),
         truncated=tr1 | tr2,
         reads=r1 + r2,
+        truncated_fwd=tr1,
+        truncated_bwd=tr2,
     )
     return reachable, cache_state, stats
 

@@ -1,25 +1,50 @@
-"""BFS frontier-expansion Pallas TPU kernel (gRouting's hot loop).
+"""BFS frontier-expansion Pallas TPU kernels (gRouting's hot loop).
 
-One hop of Algorithm 5 for a single query: given the adjacency rows of the
-current frontier and the visited bitmap, mark all neighbors visited.
+One hop of Algorithm 5: given the adjacency rows of the current frontier
+and the visited bitmap, mark all neighbors visited.
 
 TPU adaptation: vector units have no scatter, so the bitmap update is
 reformulated as a *compare-reduce* over node blocks (DESIGN.md §6):
 
-  grid = (frontier_blocks, node_blocks)
-  step (f, b): visited[b*BN : (b+1)*BN] |= any_e(nbrs[f-block] == node_ids(b))
+  step (b, f): visited[b*BN : (b+1)*BN] |= any_e(nbrs[f-block] == node_ids(b))
 
 The (BF*W, BN) comparison is a dense vectorizable op; total work is
 O(F*W*n/BN * BN) = O(F*W*n) compares -- FLOP-rich but scatter-free, the
-classic TPU trade. For sparse frontiers the engine's jnp path (scatter via
-XLA on CPU, ref.py) wins; the kernel is selected for dense frontiers where
-compares are amortized (F*W >= n/8, typical in hotspot serving with warm
-caches). Both paths are semantically identical (tests sweep shapes).
+classic TPU trade. For sparse frontiers the engine's jnp scatter path
+(`kernels.ref.frontier_expand_ref` / the `scatter` expansion backend) wins;
+the kernel pays off for dense frontiers where compares are amortized
+(candidate neighbors >= n / DENSE_RATIO, typical in hotspot serving with
+warm caches) -- `dense_frontier` below is that selection heuristic, used by
+the engine's `auto` expansion backend. Both paths are semantically
+identical (tests sweep shapes; `tests/test_expand_backends.py` is the
+backend-differential oracle).
+
+Entry points (one kernel program):
+
+  - `frontier_expand_batched`  -- whole admitted batch: rows (B, F, W),
+    visited (B, n); grid (query, node-block, frontier-block) so ONE kernel
+    launch expands every query of a processor round. This is the variant
+    `core.query_engine.expand_hop` mounts behind the `pallas` backend.
+  - `frontier_expand`          -- single query: rows (F, W), visited (n,);
+    a thin B=1 view over the batched kernel.
+
+Grid ordering: the frontier-block axis is a reduction (every frontier block
+ORs into the same visited block), so it is the INNERMOST (fastest-varying)
+grid dimension -- output blocks are revisited only on consecutive grid
+steps, the TPU-legal accumulation pattern (same shape as a matmul's k loop).
+
+Retrace discipline: block sizes are never clamped to the input (`min(bf,
+F)` would make the static grid a function of the frontier size and retrace
+per distinct F). Instead inputs are padded UP to whole blocks in a thin
+host wrapper OUTSIDE the jit boundary, so every frontier size in the same
+bucket of BF shares one trace (`tests/test_expand_backends.py` pins the
+trace counts).
 """
 
 from __future__ import annotations
 
 import functools
+from collections import Counter
 
 import jax
 import jax.numpy as jnp
@@ -27,17 +52,62 @@ from jax.experimental import pallas as pl
 
 DEFAULT_BF = 128  # frontier rows per block
 DEFAULT_BN = 512  # visited nodes per block
+DENSE_RATIO = 8  # compare-reduce pays off once candidates >= n / DENSE_RATIO
+
+# trace-regression instrumentation: each retrace of a jitted padded kernel
+# re-executes its python body and bumps its counter (tests assert that
+# bucketed padding keeps this flat across frontier sizes)
+TRACE_COUNTS: Counter = Counter()
 
 
-def _frontier_kernel(rows_ref, deg_ref, vis_in_ref, vis_out_ref, *, w: int, bn: int):
-    f = pl.program_id(0)
-    rows = rows_ref[...]  # (BF, W)
-    deg = deg_ref[...]  # (BF,)
+def dense_frontier(deg: jax.Array, n: int, ratio: int = DENSE_RATIO) -> jax.Array:
+    """Density heuristic: is the compare-reduce kernel worth launching?
+
+    deg: (..., F) int32 per-frontier-row neighbor counts (0 for -1-padded
+    rows). Returns a () bool: total candidate neighbors across the batch
+    >= total bitmap bits / ratio. Traced (usable as a `lax.cond` predicate
+    inside the serving scan).
+    """
+    bits = 1
+    for d in deg.shape[:-1]:
+        bits *= d
+    bits *= n
+    return jnp.sum(deg) * ratio >= bits
+
+
+def _compare_reduce(rows, deg, bn: int, b):
+    """(BF, W) rows + (BF,) deg -> (BN,) hit mask for node block b."""
     ok = (rows >= 0) & (jax.lax.broadcasted_iota(jnp.int32, rows.shape, 1) < deg[:, None])
     nbrs = jnp.where(ok, rows, -1).reshape(-1)  # (BF*W,)
-    b = pl.program_id(1)
     node_ids = b * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)  # (1, BN)
-    hit = jnp.any(nbrs[:, None] == node_ids, axis=0)  # (BN,)
+    return jnp.any(nbrs[:, None] == node_ids, axis=0)  # (BN,)
+
+
+def _pad_axis(x: jax.Array, axis: int, pad: int, value) -> jax.Array:
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def frontier_expand(
+    rows: jax.Array,  # (F, W) int32 adjacency rows, -1 padded
+    deg: jax.Array,  # (F,) int32
+    visited: jax.Array,  # (n,) bool
+    bf: int = DEFAULT_BF,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+) -> jax.Array:
+    """One BFS hop for a single query: the batched kernel viewed at B=1."""
+    return frontier_expand_batched(
+        rows[None], deg[None], visited[None], bf=bf, bn=bn, interpret=interpret
+    )[0]
+
+
+def _frontier_batched_kernel(rows_ref, deg_ref, vis_in_ref, vis_out_ref, *, bn: int):
+    b, f = pl.program_id(1), pl.program_id(2)
+    hit = _compare_reduce(rows_ref[0], deg_ref[0], bn, b)
 
     @pl.when(f == 0)
     def _first():
@@ -49,38 +119,45 @@ def _frontier_kernel(rows_ref, deg_ref, vis_in_ref, vis_out_ref, *, w: int, bn: 
 
 
 @functools.partial(jax.jit, static_argnames=("bf", "bn", "interpret"))
-def frontier_expand(
-    rows: jax.Array,  # (F, W) int32 adjacency rows, -1 padded
-    deg: jax.Array,  # (F,) int32
-    visited: jax.Array,  # (n,) bool
+def _frontier_batched_padded(rows, deg, vis, *, bf: int, bn: int, interpret: bool):
+    TRACE_COUNTS["frontier_expand_batched"] += 1
+    B, Fp, W = rows.shape
+    npad = vis.shape[1]
+    return pl.pallas_call(
+        functools.partial(_frontier_batched_kernel, bn=bn),
+        grid=(B, npad // bn, Fp // bf),
+        in_specs=[
+            pl.BlockSpec((1, bf, W), lambda q, b, f: (q, f, 0)),
+            pl.BlockSpec((1, bf), lambda q, b, f: (q, f)),
+            pl.BlockSpec((1, bn), lambda q, b, f: (q, b)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda q, b, f: (q, b)),
+        out_shape=jax.ShapeDtypeStruct((B, npad), vis.dtype),
+        interpret=interpret,
+    )(rows, deg, vis)
+
+
+def frontier_expand_batched(
+    rows: jax.Array,  # (B, F, W) int32 adjacency rows of every query, -1 padded
+    deg: jax.Array,  # (B, F) int32
+    visited: jax.Array,  # (B, n) bool
     bf: int = DEFAULT_BF,
     bn: int = DEFAULT_BN,
     interpret: bool = False,
 ) -> jax.Array:
-    F, W = rows.shape
-    n = visited.shape[0]
-    bf = min(bf, F)
-    bn = min(bn, n)
-    padF = (-F) % bf
-    if padF:
-        rows = jnp.concatenate([rows, jnp.full((padF, W), -1, rows.dtype)], 0)
-        deg = jnp.concatenate([deg, jnp.zeros((padF,), deg.dtype)], 0)
-    padN = (-n) % bn
-    vis = visited[None, :]  # 2D for TPU layout
-    if padN:
-        vis = jnp.concatenate([vis, jnp.zeros((1, padN), visited.dtype)], 1)
-    Fp, npad = rows.shape[0], vis.shape[1]
+    """One BFS hop for a whole query batch in ONE kernel launch.
 
-    out = pl.pallas_call(
-        functools.partial(_frontier_kernel, w=W, bn=bn),
-        grid=(Fp // bf, npad // bn),
-        in_specs=[
-            pl.BlockSpec((bf, W), lambda f, b: (f, 0)),
-            pl.BlockSpec((bf,), lambda f, b: (f,)),
-            pl.BlockSpec((1, bn), lambda f, b: (0, b)),
-        ],
-        out_specs=pl.BlockSpec((1, bn), lambda f, b: (0, b)),
-        out_shape=jax.ShapeDtypeStruct((1, npad), visited.dtype),
-        interpret=interpret,
-    )(rows, deg, vis)
-    return out[0, :n]
+    grid = (query, node-block, frontier-block); each query's rows are the
+    per-hop gather from the cache/storage read results, so this is the
+    expansion step `expand_hop` mounts behind the `pallas` backend. F and n
+    are padded up to whole (bf, bn) blocks here, outside the jit boundary --
+    NOT clamped into the block size -- so any F in the same bf bucket
+    reuses one compiled trace.
+    """
+    B, F, W = rows.shape
+    n = visited.shape[1]
+    rows = _pad_axis(rows, 1, (-F) % bf, -1)
+    deg = _pad_axis(deg, 1, (-F) % bf, 0)
+    vis = _pad_axis(visited, 1, (-n) % bn, False)
+    out = _frontier_batched_padded(rows, deg, vis, bf=bf, bn=bn, interpret=interpret)
+    return out[:, :n]

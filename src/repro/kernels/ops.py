@@ -20,8 +20,15 @@ from repro.kernels.embedding_bag import embedding_bag as _bag_pallas
 from repro.kernels.frontier import frontier_expand as _frontier_pallas
 
 
-def _on_tpu() -> bool:
+def on_tpu() -> bool:
+    """THE backend policy shared by every Pallas-vs-reference switch (here
+    and the engine's expansion-backend seam): Pallas lowers natively only
+    on TPU; everywhere else the kernels run interpreted or fall back to
+    the jnp reference."""
     return jax.default_backend() == "tpu"
+
+
+_on_tpu = on_tpu
 
 
 def _pick(use_pallas) -> bool:

@@ -23,7 +23,15 @@ entire router -> processor -> storage pipeline, end to end:
   4. `processor_round`     -- vmapped over processors: each expands its
                               queries' h-hop balls via `expand_hop`, i.e.
                               set-associative `cache_lookup`/`cache_insert`
-                              with batched storage `multi_read` for misses;
+                              with batched storage `multi_read` for misses.
+                              The visited-bitmap update inside `expand_hop`
+                              is the pluggable expansion backend
+                              (`EngineRunConfig.expand_backend`): "scatter"
+                              (XLA reference), "pallas" (one batched
+                              compare-reduce kernel launch per hop), or
+                              "auto" (`lax.cond` on frontier density).
+                              Backends are semantically interchangeable --
+                              the parity oracle runs under every one;
   5. ack                   -- router load decremented by routed counts;
                               per-round QueryStats (hit rate, storage
                               reads, backlog depth, drops, latency-in-
@@ -253,6 +261,10 @@ class EngineRunConfig:
     chain_depth: int = 8
     steal_rounds: int = 0  # dispatch passes (0 -> n_processors)
     use_cache: bool = True
+    # frontier-expansion backend threaded into every processor_round (see
+    # repro.core.query_engine.EXPAND_BACKENDS): "scatter" | "pallas" |
+    # "auto" (+ "-interpret" variants forcing the Pallas interpreter).
+    expand_backend: str = "scatter"
     # K: carry-over admission queue slots. Queries `capacity_dispatch` cannot
     # place are parked here and re-offered ahead of fresh arrivals; overflow
     # beyond K drops the OLDEST waiters. 0 = no carry-over: overflow is
@@ -376,6 +388,7 @@ class ServingEngine:
             max_frontier=cfg.max_frontier,
             chain_depth=cfg.chain_depth,
             use_cache=cfg.use_cache,
+            expand_backend=cfg.expand_backend,
         )
         self._run_jit = jax.jit(self._run_scan)
 

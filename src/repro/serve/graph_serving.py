@@ -75,6 +75,11 @@ class GServeConfig:
     read_retry: int = 4  # bounded re-issue rounds for over-capacity requests
     chain_depth: int = 64  # max continuation-chain length (ceil(max_true_degree / row_width));
     #                        the while_loop exits as soon as no row continues, so this is a cap
+    # frontier-expansion backend for the per-device engine step (see
+    # repro.core.query_engine.EXPAND_BACKENDS). Inside shard_map the "auto"
+    # density cond stays a REAL branch (per-device predicate), so each
+    # processor picks kernel vs scatter per hop independently.
+    expand_backend: str = "scatter"
     embed_dim: int = 10
     load_factor: float = 20.0
     alpha: float = 0.5
@@ -100,7 +105,8 @@ def make_distributed_serve_step(mesh: Mesh, cfg: GServeConfig):
     # axis, so every participant of that collective group must run the same
     # trip count -- the loop condition is psum'd over "model".
     ecfg = EngineConfig(
-        max_frontier=cfg.max_frontier, chain_depth=cfg.chain_depth, sync_axes=(model_ax,)
+        max_frontier=cfg.max_frontier, chain_depth=cfg.chain_depth,
+        expand_backend=cfg.expand_backend, sync_axes=(model_ax,)
     )
 
     def local_step(queries, rows, deg, cont, owner, loc, coords, ema, *cache_leaves):

@@ -1,0 +1,71 @@
+"""Property tests: `query_engine._dedup_first` (intra-batch read combining).
+
+Runs through tests/_hypothesis_compat -- real hypothesis when installed, a
+deterministic fixed-seed sample otherwise (tier-1 has no hypothesis).
+
+`_dedup_first` underpins the engine's storage read-combining: every id
+requested more than once in a batch is fetched ONCE and later duplicates
+are served from the first fetch. Its contract, exercised here on adversarial
+id multisets (heavy duplication, -1 padding mixed in, all-equal batches):
+
+  1. first-occurrence indices are fixpoints: src[i] == i wherever first[i];
+  2. src maps EVERY entry (duplicates included) to an index holding an
+     equal id, and that index is flagged as a first occurrence -- in fact
+     the minimal index holding that id (stable, order-preserving);
+  3. the mask's popcount equals the number of distinct values
+     (np.unique), i.e. dedup drops exactly the duplicates, nothing else.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.query_engine import _dedup_first
+
+
+def _check_contract(ids_np: np.ndarray):
+    first, src = _dedup_first(jnp.asarray(ids_np))
+    first = np.asarray(first)
+    src = np.asarray(src)
+    M = ids_np.size
+
+    # 1. first occurrences are fixpoints of src
+    np.testing.assert_array_equal(src[first], np.flatnonzero(first))
+
+    # 2. every entry maps to the minimal index holding an equal id
+    for i in range(M):
+        assert ids_np[src[i]] == ids_np[i], (i, src[i])
+        assert first[src[i]], (i, src[i])
+        assert src[i] == np.flatnonzero(ids_np == ids_np[i])[0], i
+
+    # 3. popcount == distinct-value count
+    assert int(first.sum()) == np.unique(ids_np).size
+
+
+@settings(max_examples=40)
+@given(st.lists(st.integers(-1, 6), min_size=1, max_size=24))
+def test_dedup_first_contract_small_alphabet(vals):
+    """Small alphabet forces heavy duplication (and -1 'padding' collisions
+    -- the function must treat -1 as an ordinary key; masking is the
+    caller's job)."""
+    _check_contract(np.asarray(vals, np.int32))
+
+
+@settings(max_examples=25)
+@given(st.lists(st.integers(-1, 10_000), min_size=1, max_size=32))
+def test_dedup_first_contract_sparse_ids(vals):
+    """Wide id space: mostly-unique batches (the common serving case)."""
+    _check_contract(np.asarray(vals, np.int32))
+
+
+def test_dedup_first_all_equal_and_empty():
+    _check_contract(np.full(17, 3, np.int32))
+    first, src = _dedup_first(jnp.zeros((0,), jnp.int32))
+    assert first.shape == (0,) and src.shape == (0,)
+
+
+def test_dedup_first_already_unique_is_identity():
+    ids = np.array([5, 2, 9, 0, 7], np.int32)
+    first, src = _dedup_first(jnp.asarray(ids))
+    assert np.asarray(first).all()
+    np.testing.assert_array_equal(np.asarray(src), np.arange(5))

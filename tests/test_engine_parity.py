@@ -17,6 +17,16 @@ routing scheme and every workload:
   - per-processor query counts match exactly,
   - per-processor storage read volumes match exactly.
 
+Backend axis: the engine side runs under BOTH frontier-expansion backends
+(`scatter`, the XLA reference, and `pallas-interpret`, the batched
+compare-reduce kernel executed through the Pallas interpreter on CPU) --
+touch-set / load / read-volume / backlog parity is therefore a BACKEND
+INVARIANCE guarantee, not just a pipeline one. The kernel backend runs the
+full 4-scheme axis on the uniform workload (the remaining workloads ride
+the scatter sweep; the interpreter is ~30x slower, and the fast
+backend-differential gate `tests/test_expand_backends.py` already pins
+bit-identical engine behaviour across backends per shape).
+
 Steal-parity configuration: per-round slot capacity is constrained so
 dispatch-level hard stealing fires; execution parity must still hold under
 the stolen placement, and the engine's load balance must beat the sticky
@@ -35,6 +45,8 @@ float-width differences in landmark/embed scoring cannot mask a queueing
 bug; the hash scheme is ADDITIONALLY tested fully independently (integer
 routing), with the simulator routing for itself.
 """
+
+import dataclasses
 
 import numpy as np
 import pytest
@@ -56,8 +68,25 @@ P = 4
 HOPS = 2
 SETS, WAYS = 1024, 16  # capacity 16K >> any per-proc working set: cold misses only
 SCHEMES = ("next_ready", "hash", "landmark", "embed")
+BACKENDS = ("scatter", "pallas-interpret")
 N_QUERIES = 160
 ROUND = 32
+
+
+def _backend_cases(workloads):
+    """(scheme, workload, backend) triples: scatter sweeps every workload,
+    the interpreter-run kernel backend covers all 4 schemes on uniform."""
+    cases = []
+    for backend in BACKENDS:
+        wls = workloads if backend == "scatter" else ["uniform"]
+        for scheme in SCHEMES:
+            for wl in wls:
+                cases.append(pytest.param(scheme, wl, backend,
+                                          id=f"{scheme}-{wl}-{backend}"))
+    return cases
+
+
+WORKLOADS = ["uniform", "hotspot", "drifting", "antilocality"]
 
 
 @pytest.fixture(scope="module")
@@ -76,13 +105,19 @@ def cluster():
         max_frontier=256, cache_sets=SETS, cache_ways=WAYS, chain_depth=2,
         track_touched=True,
     )
-    engines = {}
-    for scheme in SCHEMES:
-        router = Router(P, RouterConfig(scheme=scheme), landmark_index=li,
-                        embedding=ge, seed=3)
-        engines[scheme] = ServingEngine(tier, router, cfg)
-    return dict(g=g, tier=tier, li=li, ge=ge, engines=engines,
-                balls=BallCache(g))
+    routers = {
+        scheme: Router(P, RouterConfig(scheme=scheme), landmark_index=li,
+                       embedding=ge, seed=3)
+        for scheme in SCHEMES
+    }
+    engines = {  # keyed (scheme, backend); jit compiles lazily on first run
+        (scheme, backend): ServingEngine(
+            tier, routers[scheme],
+            dataclasses.replace(cfg, expand_backend=backend))
+        for scheme in SCHEMES for backend in BACKENDS
+    }
+    return dict(g=g, tier=tier, li=li, ge=ge, routers=routers,
+                engines=engines, balls=BallCache(g))
 
 
 def _workload(g, name):
@@ -106,12 +141,11 @@ def _oracle_sim(cluster, scheme, **kw):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("wl_name", ["uniform", "hotspot", "drifting", "antilocality"])
-@pytest.mark.parametrize("scheme", SCHEMES)
-def test_engine_simulator_exact_parity(cluster, scheme, wl_name):
+@pytest.mark.parametrize("scheme,wl_name,backend", _backend_cases(WORKLOADS))
+def test_engine_simulator_exact_parity(cluster, scheme, wl_name, backend):
     g = cluster["g"]
     wl = _workload(g, wl_name)
-    eng = cluster["engines"][scheme]
+    eng = cluster["engines"][(scheme, backend)]
     res, _ = eng.run(wl)
 
     # engine sanity: capacity == round_size means dispatch never steals and
@@ -166,8 +200,10 @@ def over_engines(cluster):
         backlog_capacity=OVER_BACKLOG, track_touched=True,
     )
     return {
-        scheme: ServingEngine(cluster["tier"], cluster["engines"][scheme].router, cfg)
-        for scheme in SCHEMES
+        (scheme, backend): ServingEngine(
+            cluster["tier"], cluster["routers"][scheme],
+            dataclasses.replace(cfg, expand_backend=backend))
+        for scheme in SCHEMES for backend in BACKENDS
     }
 
 
@@ -209,15 +245,16 @@ def _assert_queue_parity(res, qres, P):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("wl_name", ["uniform", "hotspot", "drifting", "antilocality"])
-@pytest.mark.parametrize("scheme", SCHEMES)
-def test_engine_simulator_queue_parity(cluster, over_engines, scheme, wl_name):
+@pytest.mark.parametrize("scheme,wl_name,backend", _backend_cases(WORKLOADS))
+def test_engine_simulator_queue_parity(cluster, over_engines, scheme, wl_name,
+                                       backend):
     """2x-oversubscribed arrivals: the jit scan's backlog ring and the
     round-based python mirror must evolve identically -- backlog depth per
-    round, completion round per query, drop sets, placement, touch sets."""
+    round, completion round per query, drop sets, placement, touch sets --
+    under every expansion backend."""
     g = cluster["g"]
     wl = _workload(g, wl_name)
-    res, _ = over_engines[scheme].run(wl)
+    res, _ = over_engines[(scheme, backend)].run(wl)
 
     # overload sanity: the ring actually absorbed overflow and drained
     assert res.peak_backlog > 0 and res.final_backlog == 0
@@ -243,13 +280,14 @@ def test_engine_simulator_queue_parity(cluster, over_engines, scheme, wl_name):
 
 
 @pytest.mark.slow
-def test_engine_queue_parity_independent_hash(cluster, over_engines):
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_engine_queue_parity_independent_hash(cluster, over_engines, backend):
     """Hash routing is integer arithmetic: the simulator can route for
     itself (no replay), making engine and mirror FULLY independent -- the
-    strongest form of the queue-aware oracle."""
+    strongest form of the queue-aware oracle, held per backend."""
     g = cluster["g"]
     wl = _workload(g, "uniform")
-    res, _ = over_engines["hash"].run(wl)
+    res, _ = over_engines[("hash", backend)].run(wl)
     assert res.n_dropped > 0  # drop-oldest admission genuinely exercised
 
     sim = _oracle_sim(cluster, "hash", steal=False)
@@ -306,7 +344,7 @@ def test_engine_warm_state_carries_cache(cluster):
     paper's repeated-burst experiment on the jit path)."""
     g = cluster["g"]
     wl = hotspot_workload(g, r=1, n_hotspots=10, queries_per_hotspot=8, seed=7)
-    eng = cluster["engines"]["embed"]
+    eng = cluster["engines"][("embed", "scatter")]
     res1, state = eng.run(wl)
     res2, _ = eng.run(wl, state=state)
     assert res2.reads < res1.reads

@@ -1,0 +1,295 @@
+"""Backend-differential oracle for the frontier-expansion seam.
+
+`core.query_engine.expand_hop` delegates its visited-bitmap update to a
+pluggable backend (`EngineConfig.expand_backend`): `scatter` (the XLA
+`.at[].max()` reference), `pallas` (the batched compare-reduce kernel,
+exercised here through the interpreter so the exact kernel program runs on
+CPU), and `auto` (per-hop density cond). This suite is the fast kernel-path
+gate: it must fail BEFORE the slow engine<->simulator oracle does.
+
+Three altitudes:
+
+  1. kernel vs reference across (B, F, W, n) shapes -- padding seams
+     (F % bf != 0, n % bn != 0, dims smaller than one block), all-padded
+     (drained) frontiers, deg == 0 rows, out-of-range ids;
+  2. the full query engine (`run_neighbor_aggregation`) run under every
+     backend on the same workload: counts, stats, and the ENTIRE cache
+     state must be bit-identical -- the backend-invariance guarantee the
+     parity oracle then re-checks against the simulator;
+  3. trace discipline: bucketed padding (never clamping block sizes to the
+     input) keeps the jit trace count flat across frontier sizes within a
+     bucket -- the retrace-churn regression test.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import cache as cache_lib
+from repro.core.query_engine import (
+    EXPAND_BACKENDS, EngineConfig, get_expand_backend, make_ref_multi_read,
+    run_neighbor_aggregation,
+)
+from repro.core.storage import build_storage
+from repro.graph.csr import to_padded
+from repro.kernels import frontier as frontier_lib
+from repro.kernels import ref
+from repro.kernels.frontier import (
+    dense_frontier, frontier_expand, frontier_expand_batched,
+)
+
+BF, BN = 16, 128  # small blocks so tiny shapes still cross block seams
+
+
+def _batch_case(B, F, W, n, seed, frac_pad=0.15):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, n, (B, F, W)).astype(np.int32)
+    rows[rng.random(rows.shape) < frac_pad] = -1
+    deg = rng.integers(0, W + 1, (B, F)).astype(np.int32)
+    visited = rng.random((B, n)) < 0.25
+    return rows, deg, visited
+
+
+# every case hits a distinct seam for bf=16, bn=128; n=129/255 are the
+# n-%-bn edges, F=17 the frontier pad edge, B=1 the degenerate batch
+BATCH_CASES = [
+    (1, 16, 4, 128, "aligned"),
+    (3, 17, 4, 129, "F % bf == 1, n % bn == 1"),
+    (2, 16, 5, 255, "n % bn == bn - 1"),
+    (4, 7, 3, 50, "tiny: F < bf, n < bn"),
+    (2, 33, 8, 513, "both ragged, n not divisible by bn"),
+    (5, 16, 1, 200, "W == 1"),
+]
+
+
+@pytest.mark.parametrize("B,F,W,n,label", BATCH_CASES)
+def test_batched_kernel_vs_ref(B, F, W, n, label):
+    rows, deg, visited = _batch_case(B, F, W, n, seed=B * 7919 + n)
+    out = frontier_expand_batched(
+        jnp.asarray(rows), jnp.asarray(deg), jnp.asarray(visited),
+        bf=BF, bn=BN, interpret=True,
+    )
+    expect = np.stack([
+        np.asarray(ref.frontier_expand_ref(
+            jnp.asarray(rows[b]), jnp.asarray(deg[b]), jnp.asarray(visited[b])))
+        for b in range(B)
+    ])
+    np.testing.assert_array_equal(np.asarray(out), expect, err_msg=label)
+
+
+def test_batched_kernel_all_padded_frontier():
+    """A fully drained batch (all ids -1, deg 0) marks nothing -- the shape
+    the engine feeds the kernel once every query's BFS has finished."""
+    B, F, W, n = 3, 16, 4, 200
+    rows = np.full((B, F, W), -1, np.int32)
+    deg = np.zeros((B, F), np.int32)
+    visited = np.random.default_rng(0).random((B, n)) < 0.5
+    out = frontier_expand_batched(
+        jnp.asarray(rows), jnp.asarray(deg), jnp.asarray(visited),
+        bf=BF, bn=BN, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(out), visited)
+    # deg == 0 must also mask stale non-(-1) row contents
+    rows2 = np.full((B, F, W), 7, np.int32)
+    out2 = frontier_expand_batched(
+        jnp.asarray(rows2), jnp.asarray(deg), jnp.asarray(visited),
+        bf=BF, bn=BN, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(out2), visited)
+
+
+def test_batched_rows_isolated_per_query():
+    """Query b's neighbors must only land in row b of the bitmap."""
+    B, F, W, n = 4, 16, 2, 150
+    rows = np.full((B, F, W), -1, np.int32)
+    deg = np.zeros((B, F), np.int32)
+    for b in range(B):
+        rows[b, 0, 0] = 10 * b
+        deg[b, 0] = 1
+    out = np.asarray(frontier_expand_batched(
+        jnp.asarray(rows), jnp.asarray(deg), jnp.asarray(np.zeros((B, n), bool)),
+        bf=BF, bn=BN, interpret=True,
+    ))
+    for b in range(B):
+        assert set(np.nonzero(out[b])[0].tolist()) == {10 * b}
+
+
+# ---------------------------------------------------------------------------
+# the seam itself: every backend produces bit-identical engine behaviour
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_engine(tiny_graph):
+    adj = to_padded(tiny_graph, max_degree=8)  # forces continuation chains
+    tier = build_storage(adj, n_shards=3)
+    return tiny_graph, tier, make_ref_multi_read(tier)
+
+
+def _run_backend(g, tier, mr, backend):
+    cache = cache_lib.make_cache(n_sets=256, n_ways=4, row_width=tier.row_width)
+    cfg = EngineConfig(max_frontier=320, chain_depth=32, expand_backend=backend)
+    q = jnp.asarray(np.array([0, 3, 50, 123, -1], np.int32))
+    tmap = jnp.zeros((g.n,), bool)
+    counts, cache, stats, tmap = run_neighbor_aggregation(
+        None, cache, q, h=2, n=g.n, cfg=cfg, multi_read=mr, touched_map=tmap)
+    return (np.asarray(counts), int(stats.reads), int(stats.touched),
+            int(stats.misses), np.asarray(stats.truncated),
+            np.asarray(tmap), cache)
+
+
+@pytest.mark.parametrize("backend", ["pallas-interpret", "auto-interpret"])
+def test_engine_backend_invariance(small_engine, backend):
+    """Counts, stats, touch bitmap AND the full cache state must match the
+    scatter reference exactly -- the invariance the parity oracle relies on."""
+    g, tier, mr = small_engine
+    base = _run_backend(g, tier, mr, "scatter")
+    got = _run_backend(g, tier, mr, backend)
+    np.testing.assert_array_equal(got[0], base[0])  # counts
+    assert got[1:4] == base[1:4]  # reads / touched / misses
+    np.testing.assert_array_equal(got[4], base[4])  # truncated
+    np.testing.assert_array_equal(got[5], base[5])  # touched_map
+    for name in ("tags", "age", "data", "deg", "cont", "hits", "misses"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got[6], name)), np.asarray(getattr(base[6], name)),
+            err_msg=f"cache.{name} diverged under {backend}")
+
+
+def test_serving_engine_auto_backend_matches_scatter():
+    """`auto` through the FULL jit ServingEngine: under the engine's vmap
+    over processors the density cond lowers to a select (both branches
+    execute), which must still be bit-invariant with the scatter reference
+    across rounds, caches and stats."""
+    from repro.core.router import Router, RouterConfig
+    from repro.core.workloads import uniform_workload
+    from repro.graph.generators import community_graph
+    from repro.serve.engine import EngineRunConfig, ServingEngine
+
+    g = community_graph(n=400, community_size=40, intra_degree=5,
+                        inter_degree=1.0, seed=2)
+    tier = build_storage(to_padded(g, max_degree=int(g.degree().max())),
+                         n_shards=2)
+    wl = uniform_workload(g, n_queries=32, seed=3)
+    results = {}
+    for backend in ("scatter", "auto-interpret"):
+        cfg = EngineRunConfig(
+            n_processors=2, round_size=16, capacity=16, hops=2,
+            max_frontier=128, cache_sets=256, cache_ways=8, chain_depth=2,
+            track_touched=True, expand_backend=backend,
+        )
+        router = Router(2, RouterConfig(scheme="hash"), seed=1)
+        res, _ = ServingEngine(tier, router, cfg).run(wl)
+        results[backend] = res
+    base, got = results["scatter"], results["auto-interpret"]
+    np.testing.assert_array_equal(got.counts, base.counts)
+    np.testing.assert_array_equal(got.touched_bitmap, base.touched_bitmap)
+    assert (got.reads, got.touched, got.probe_misses) == (
+        base.reads, base.touched, base.probe_misses)
+
+
+def test_shard_map_auto_backend_matches_scatter():
+    """`auto` through the shard_map serving step (where the density cond
+    stays a REAL per-device branch): counts and global stats must match the
+    scatter reference."""
+    import jax
+    from repro.core.storage import make_serving_storage
+    from repro.graph.generators import powerlaw_graph
+    from repro.launch.mesh import make_auto_mesh
+    from repro.serve.graph_serving import (
+        GServeConfig, make_distributed_serve_step, make_processor_caches,
+    )
+
+    g = powerlaw_graph(n=300, m=4, seed=0)
+    adj = to_padded(g, max_degree=8)  # forces continuation chains
+    tier = build_storage(adj, n_shards=1)
+    store = make_serving_storage(tier)
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
+    queries = jnp.asarray(np.arange(8, dtype=np.int32))[None, :]
+    out = {}
+    for backend in ("scatter", "auto-interpret", "pallas-interpret"):
+        cfg = GServeConfig(
+            n_nodes=g.n, n_rows=adj.n_rows, row_width=adj.max_degree,
+            n_storage_shards=1, queries_per_proc=8, hops=2, max_frontier=128,
+            cache_sets=128, cache_ways=4, read_capacity=512, chain_depth=8,
+            embed_dim=4, expand_backend=backend,
+        )
+        step = jax.jit(make_distributed_serve_step(mesh, cfg))
+        inputs = {
+            "queries": queries, "rows": store["rows"], "deg": store["deg"],
+            "cont": store["cont"], "owner": store["owner"], "loc": store["loc"],
+            "coords": jnp.zeros((g.n, 4), jnp.float32),
+            "ema": jnp.zeros((1, 4), jnp.float32),
+            "cache": make_processor_caches(mesh, cfg),
+        }
+        with mesh:
+            counts, _, _, stats = step(inputs)
+        out[backend] = (np.asarray(counts), np.asarray(stats))
+    for backend in ("auto-interpret", "pallas-interpret"):
+        np.testing.assert_array_equal(out[backend][0], out["scatter"][0],
+                                      err_msg=backend)
+        np.testing.assert_array_equal(out[backend][1], out["scatter"][1],
+                                      err_msg=backend)
+
+
+def test_get_expand_backend_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown expand_backend"):
+        get_expand_backend("madeup", n=100)
+    assert set(EXPAND_BACKENDS) >= {"scatter", "pallas", "auto"}
+
+
+def test_dense_frontier_heuristic():
+    # 4 queries x 8 rows x deg 8 = 256 candidates vs 4 * n / 8 thresholds
+    deg = jnp.full((4, 8), 8, jnp.int32)
+    assert bool(dense_frontier(deg, n=100))  # 256 * 8 >= 400
+    assert not bool(dense_frontier(deg, n=100_000))
+    assert not bool(dense_frontier(jnp.zeros((4, 8), jnp.int32), n=8))
+
+
+# ---------------------------------------------------------------------------
+# retrace churn: padding buckets frontier sizes; block sizes never clamp
+# ---------------------------------------------------------------------------
+
+
+def test_frontier_trace_count_flat_within_bucket():
+    """Distinct frontier sizes inside one bf bucket must share ONE compiled
+    trace (the old `bf = min(bf, F)` clamp recompiled per F).
+    `frontier_expand` is a B=1 view over the batched kernel, so the batched
+    counter is the one that must stay flat."""
+    frontier_lib.TRACE_COUNTS.clear()
+    n = 300
+    for F in (100, 113, 120, 128):
+        rows = jnp.full((F, 4), -1, jnp.int32)
+        deg = jnp.zeros((F,), jnp.int32)
+        frontier_expand(rows, deg, jnp.zeros((n,), bool), bf=128, bn=256,
+                        interpret=True)
+    assert frontier_lib.TRACE_COUNTS["frontier_expand_batched"] == 1
+    # crossing the bucket edge retraces exactly once more
+    rows = jnp.full((129, 4), -1, jnp.int32)
+    frontier_expand(rows, jnp.zeros((129,), jnp.int32), jnp.zeros((n,), bool),
+                    bf=128, bn=256, interpret=True)
+    assert frontier_lib.TRACE_COUNTS["frontier_expand_batched"] == 2
+
+
+def test_batched_trace_count_flat_within_bucket():
+    frontier_lib.TRACE_COUNTS.clear()
+    n = 300
+    for F in (30, 40, 48):
+        rows = jnp.full((2, F, 4), -1, jnp.int32)
+        deg = jnp.zeros((2, F), jnp.int32)
+        frontier_expand_batched(rows, deg, jnp.zeros((2, n), bool), bf=48,
+                                bn=256, interpret=True)
+    assert frontier_lib.TRACE_COUNTS["frontier_expand_batched"] == 1
+
+
+def test_frontier_expand_matches_ref_after_padding_change():
+    """Semantics unchanged by the pad-up path (F far below bf)."""
+    rng = np.random.default_rng(5)
+    F, W, n = 9, 4, 70
+    rows = rng.integers(0, n, (F, W)).astype(np.int32)
+    deg = rng.integers(0, W + 1, F).astype(np.int32)
+    visited = rng.random(n) < 0.3
+    out = frontier_expand(jnp.asarray(rows), jnp.asarray(deg),
+                          jnp.asarray(visited), bf=128, bn=512, interpret=True)
+    expect = ref.frontier_expand_ref(jnp.asarray(rows), jnp.asarray(deg),
+                                     jnp.asarray(visited))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))

@@ -111,6 +111,45 @@ def test_reachability_matches_oracle(engine):
         assert bool(reach[i]) == expect, (src[i], dst[i])
 
 
+def test_reachability_per_direction_truncation(engine):
+    """`run_reachability` surfaces which DIRECTION of the bi-directional BFS
+    truncated: `truncated_fwd`/`truncated_bwd` on QueryStats, with
+    `truncated` their OR. A roomy config reports neither."""
+    g, tier, cache, cfg = engine
+    src = jnp.asarray(np.array([0, 5], np.int32))
+    dst = jnp.asarray(np.array([9, 2], np.int32))
+    _, _, stats = run_reachability(
+        None, cache, src, dst, h=3, n=g.n, cfg=cfg,
+        multi_read=make_ref_multi_read(tier))
+    assert stats.truncated_fwd is not None and stats.truncated_bwd is not None
+    np.testing.assert_array_equal(
+        np.asarray(stats.truncated),
+        np.asarray(stats.truncated_fwd) | np.asarray(stats.truncated_bwd))
+    assert not np.asarray(stats.truncated).any()
+
+    # F too small for a hub's one-hop ball: with h=3 the FORWARD pass runs
+    # 2 hops and the backward pass 1; starting both sides on hub node 0
+    # must flag both directions independently.
+    tight = EngineConfig(max_frontier=4, chain_depth=32)
+    hub = jnp.asarray(np.array([0], np.int32))
+    _, _, tstats = run_reachability(
+        None, cache, hub, hub, h=3, n=g.n, cfg=tight,
+        multi_read=make_ref_multi_read(tier))
+    assert bool(np.asarray(tstats.truncated_fwd)[0])
+    assert bool(np.asarray(tstats.truncated_bwd)[0])
+    assert bool(np.asarray(tstats.truncated)[0])
+
+
+def test_query_stats_truncation_detail_default_none(engine):
+    """Additive contract: non-reachability query types leave the
+    per-direction detail fields at their None default."""
+    g, tier, cache, cfg = engine
+    q = jnp.asarray(np.array([1], np.int32))
+    _, _, stats, _ = run_neighbor_aggregation(
+        None, cache, q, 1, g.n, cfg, make_ref_multi_read(tier))
+    assert stats.truncated_fwd is None and stats.truncated_bwd is None
+
+
 def test_truncation_flagged():
     """A frontier wider than max_frontier must set the truncated flag."""
     from repro.graph.generators import erdos_renyi_graph
