@@ -15,36 +15,67 @@ steady-state backlog must be nonzero (the queue is genuinely absorbing the
 overload, not silently dropping it) and drop-oldest admission accounts for
 every query that doesn't complete.
 
-`--backend` selects the frontier-expansion backend(s) the engine runs
-(comma-separated: scatter | pallas | pallas-interpret | auto |
-auto-interpret). With more than one backend the scheme x workload table is
-reported PER BACKEND -- qps is the only column allowed to move: hit rates,
-read volumes and load balance are backend invariants and the bench fails
-if they drift.
+`--backend` selects the frontier-expansion backend(s) and `--layout` the
+visited-set layout(s) the engine runs (both comma-separated; backends:
+scatter | pallas | pallas-interpret | auto | auto-interpret; layouts:
+dense | packed). With more than one backend/layout the scheme x workload
+table is reported PER (backend, layout) cell -- qps and visited-set bytes
+are the only columns allowed to move: hit rates, read volumes and load
+balance are backend AND layout invariants and the bench fails if they
+drift. Each row reports the per-round visited-set footprint (`vis_kb`:
+the MEASURED device-buffer bytes of the P * capacity query-slot visited
+state the engine carries, cross-checked against the layout's formula) --
+the packed layout must come in >= 8x under dense.
+
+The final section is the SCALE run (skipped under --quick): the "large"
+power-law preset (262144 nodes -- past ROADMAP's >100K dense-bitmap wall)
+served end-to-end under both layouts, validating completion, layout
+invariance of counts/reads at scale, and the >= 8x memory cut.
 
 Validations: smart routing (landmark/embed) must beat naive (next_ready)
 on cache hit rate under hotspot traffic, no scheme may gain real hit rate
 on the anti-locality stream, the overload run must show a nonzero
-steady-state backlog with completed + dropped == offered, and multi-backend
-runs must agree on every non-timing stat.
+steady-state backlog with completed + dropped == offered, and multi-
+backend / multi-layout runs must agree on every non-timing stat.
 """
 
 from __future__ import annotations
 
 import argparse
 
+import numpy as np
+import jax.numpy as jnp
+
 from benchmarks.common import bench_graph, preprocess, print_table
 from repro.core.router import Router, RouterConfig
 from repro.core.storage import build_storage
+from repro.core.visited import get_visited_layout, visited_nbytes
 from repro.core.workloads import (
     antilocality_workload, drifting_hotspot_workload, hotspot_workload,
-    uniform_workload,
+    preset_workload, uniform_workload,
 )
 from repro.graph.csr import to_padded
+from repro.kernels.frontier import frontier_expand_packed, n_words
 from repro.serve.engine import EngineRunConfig, ServingEngine
 
 SCHEMES = ("next_ready", "hash", "landmark", "embed")
 P = 4
+
+
+def _measured_visited_bytes(layout: str, B: int, n: int) -> int:
+    """Bytes of the visited state the engine ACTUALLY carries: build the
+    same (B,)-query array `expand_hop`'s BFS starts from and is carried
+    through the hop/chain loops (`layout.init_search`, the engine's one
+    constructor) and read the device buffer size off it -- a real
+    allocation, not the layout's advertised formula. The formula
+    (`visited_nbytes`) is cross-checked against it so the two can never
+    silently diverge."""
+    vis, _, _ = get_visited_layout(layout).init_search(
+        jnp.zeros((B,), jnp.int32), n, 4)
+    measured = int(vis.nbytes)
+    assert measured == visited_nbytes(layout, B, n), (
+        layout, measured, visited_nbytes(layout, B, n))
+    return measured
 
 
 def _workloads(g, n_queries):
@@ -93,7 +124,85 @@ def _overload_bench(g, li, ge, tier, n_queries: int, backend: str = "scatter"):
     return ok
 
 
-def main(quick: bool = False, backends=("scatter",)):
+def _scale_bench(layouts, n_queries: int = 48) -> bool:
+    """Serve the 'large' power-law preset (262144 nodes) end to end.
+
+    This is the regime the bit-packed layout exists for: one round of
+    per-query dense visited state is P*C x 256KB, the packed words are 8x
+    smaller. Runs every requested layout on the SAME workload and
+    validates completion, layout invariance of per-query counts and read
+    volumes at scale, and the (measured) carried-state memory ratio.
+
+    The serve itself runs the scatter backend: interpreting the Pallas
+    kernel for every hop at this n is prohibitively slow on CPU (real-TPU
+    kernel benchmarking is an open ROADMAP item), and the packed scatter
+    path's transient dense delta is per-op scratch, not carried state --
+    the 8x claim is about the scan-carry footprint. The packed KERNEL is
+    still exercised at scale-n shapes below: one interpret-mode launch
+    over the full 262144-bit word row, checked against the packed scatter
+    reference, so a scale-only kernel bug (word indexing past 2^18 bits,
+    grid overflow) cannot hide behind the scatter serve.
+    """
+    g, wl = preset_workload("large", n_queries=n_queries, seed=0)
+    print(f"\n[scale] graph: {g.n} nodes, {g.e} directed edges; "
+          f"workload {wl.name}: {wl.query_nodes.size} queries")
+    adj = to_padded(g, max_degree=64)
+    tier = build_storage(adj, n_shards=P)
+    B = 16
+    rows, results = [], {}
+    for layout in layouts:
+        cfg = EngineRunConfig(
+            n_processors=P, round_size=B, capacity=B, hops=2,
+            max_frontier=4096, cache_sets=4096, cache_ways=8, chain_depth=64,
+            expand_backend="scatter", visited_layout=layout,
+        )
+        router = Router(P, RouterConfig(scheme="hash"), seed=3)
+        eng = ServingEngine(tier, router, cfg)
+        res, _ = eng.run(wl)
+        results[layout] = res
+        rows.append(dict(
+            layout=layout, qps=res.throughput_qps, hit_rate=res.hit_rate,
+            reads=res.reads, completed=int(res.completed.sum()),
+            truncated=int(res.truncated),
+            vis_mb=_measured_visited_bytes(layout, P * B, g.n) / 2**20,
+        ))
+    print_table(f"scale run: {g.n}-node preset, end to end per layout", rows)
+    ok_complete = all(r.completed.all() for r in results.values())
+    print(f"[validate] scale: every query completes under every layout -> "
+          f"{'OK' if ok_complete else 'FAIL'}")
+    ok = ok_complete
+    if set(layouts) >= {"dense", "packed"}:
+        d, p = results["dense"], results["packed"]
+        ok_inv = bool(np.array_equal(d.counts, p.counts)) and d.reads == p.reads
+        ratio = _measured_visited_bytes("dense", P * B, g.n) / \
+            _measured_visited_bytes("packed", P * B, g.n)
+        ok_ratio = ratio >= 8.0
+        ok &= ok_inv and ok_ratio
+        print(f"[validate] scale: counts/reads layout-invariant at "
+              f"{g.n} nodes -> {'OK' if ok_inv else 'FAIL'}; measured "
+              f"visited-memory ratio dense/packed = {ratio:.2f}x (>= 8x) -> "
+              f"{'OK' if ok_ratio else 'FAIL'}")
+    if "packed" in layouts:
+        # packed Pallas kernel at scale-n shapes (see docstring)
+        rng = np.random.default_rng(1)
+        Bk, F, W = 2, 128, 64
+        krows = jnp.asarray(rng.integers(0, g.n, (Bk, F, W)), jnp.int32)
+        kdeg = jnp.asarray(rng.integers(0, W + 1, (Bk, F)), jnp.int32)
+        kvis = jnp.zeros((Bk, n_words(g.n)), jnp.uint32)
+        out_k = frontier_expand_packed(krows, kdeg, kvis, g.n,
+                                       bf=F, bw=64, interpret=True)
+        out_s = get_visited_layout("packed").expander("scatter", g.n)(
+            krows, kdeg, kvis)
+        ok_kernel = bool(jnp.array_equal(out_k, out_s))
+        ok &= ok_kernel
+        print(f"[validate] packed kernel == packed scatter reference on the "
+              f"full {g.n}-bit row (one interpret-mode launch) -> "
+              f"{'OK' if ok_kernel else 'FAIL'}")
+    return ok
+
+
+def main(quick: bool = False, backends=("scatter",),
+         layouts=("dense", "packed"), scale: bool = True):
     n = 2400 if quick else 4800
     n_queries = 128 if quick else 256
     g = bench_graph(n=n)
@@ -104,40 +213,58 @@ def main(quick: bool = False, backends=("scatter",)):
 
     rows = []
     hit = {}
-    inv = {}  # (scheme, workload) -> backend-invariant stat tuple
-    drifted = []  # backend-invariance violations (reported after the table)
+    inv = {}  # (scheme, workload) -> backend/layout-invariant stat tuple
+    drifted = []  # invariance violations (reported after the table)
+    cap = 32  # per-processor slot capacity of every table config below
+    vis_bytes = {
+        layout: _measured_visited_bytes(layout, P * cap, g.n)
+        for layout in layouts
+    }
     for backend in backends:
-        cfg = EngineRunConfig(
-            n_processors=P, round_size=32, capacity=32, hops=2,
-            max_frontier=384, cache_sets=1024, cache_ways=8, chain_depth=2,
-            expand_backend=backend,
-        )
-        for scheme in SCHEMES:
-            router = Router(P, RouterConfig(scheme=scheme), landmark_index=li,
-                            embedding=ge, seed=3)
-            eng = ServingEngine(tier, router, cfg)
-            for wname, wl in wls.items():
-                eng.run(wl)  # warm-up: compile + trace caches
-                res, _ = eng.run(wl)
-                rows.append(dict(backend=backend, scheme=scheme,
-                                 workload=wname, qps=res.throughput_qps,
-                                 hit_rate=res.hit_rate, reads=res.reads,
-                                 imbalance=res.load_imbalance,
-                                 stolen=res.stolen))
-                hit[(backend, scheme, wname)] = res.hit_rate
-                key = (scheme, wname)
-                stats = (res.hit_rate, res.reads, res.touched,
-                         int(res.completed.sum()))
-                if key in inv and inv[key] != stats:
-                    drifted.append((backend, key, stats, inv[key]))
-                inv.setdefault(key, stats)
-    print_table("engine end-to-end (measured wall-clock, per backend)", rows)
+        for layout in layouts:
+            cfg = EngineRunConfig(
+                n_processors=P, round_size=cap, capacity=cap, hops=2,
+                max_frontier=384, cache_sets=1024, cache_ways=8, chain_depth=2,
+                expand_backend=backend, visited_layout=layout,
+            )
+            for scheme in SCHEMES:
+                router = Router(P, RouterConfig(scheme=scheme),
+                                landmark_index=li, embedding=ge, seed=3)
+                eng = ServingEngine(tier, router, cfg)
+                for wname, wl in wls.items():
+                    eng.run(wl)  # warm-up: compile + trace caches
+                    res, _ = eng.run(wl)
+                    rows.append(dict(backend=backend, layout=layout,
+                                     scheme=scheme, workload=wname,
+                                     qps=res.throughput_qps,
+                                     hit_rate=res.hit_rate, reads=res.reads,
+                                     vis_kb=vis_bytes[layout] / 1024,
+                                     imbalance=res.load_imbalance,
+                                     stolen=res.stolen))
+                    hit[(backend, scheme, wname)] = res.hit_rate
+                    key = (scheme, wname)
+                    stats = (res.hit_rate, res.reads, res.touched,
+                             int(res.completed.sum()))
+                    if key in inv and inv[key] != stats:
+                        drifted.append((backend, layout, key, stats, inv[key]))
+                    inv.setdefault(key, stats)
+    print_table("engine end-to-end (measured wall-clock, per backend x layout)",
+                rows)
     ok4 = not drifted
-    if len(backends) > 1:
+    if len(backends) > 1 or len(layouts) > 1:
         print(f"[validate] hit rates / read volumes identical across "
-              f"backends {','.join(backends)} -> {'OK' if ok4 else 'FAIL'}")
-        for backend, key, stats, expect in drifted:
-            print(f"  drift: backend {backend} {key}: {stats} != {expect}")
+              f"backends {{{','.join(backends)}}} x layouts "
+              f"{{{','.join(layouts)}}} -> {'OK' if ok4 else 'FAIL'}")
+        for backend, layout, key, stats, expect in drifted:
+            print(f"  drift: ({backend}, {layout}) {key}: {stats} != {expect}")
+    ok5 = True
+    if "dense" in vis_bytes and "packed" in vis_bytes:
+        ratio = vis_bytes["dense"] / vis_bytes["packed"]
+        ok5 = ratio >= 8.0
+        print(f"[validate] packed visited-set memory cut (measured buffers): "
+              f"{vis_bytes['dense'] / 1024:.0f}kb -> "
+              f"{vis_bytes['packed'] / 1024:.0f}kb per round "
+              f"({ratio:.2f}x, >= 8x) -> {'OK' if ok5 else 'FAIL'}")
 
     b0 = backends[0]
     ok3 = _overload_bench(g, li, ge, tier, n_queries, backend=b0)
@@ -155,7 +282,10 @@ def main(quick: bool = False, backends=("scatter",)):
           f"{'OK' if ok2 else 'FAIL'}")
     print(f"[validate] 2x overload sustains a nonzero steady-state backlog "
           f"and accounts for every query -> {'OK' if ok3 else 'FAIL'}")
-    if not (ok1 and ok2 and ok3 and ok4):
+    ok6 = True
+    if scale and not quick:
+        ok6 = _scale_bench(layouts)
+    if not (ok1 and ok2 and ok3 and ok4 and ok5 and ok6):
         raise AssertionError("engine bench validation failed")
 
 
@@ -166,5 +296,11 @@ if __name__ == "__main__":
                     help="comma-separated expansion backends to bench "
                          "(scatter | pallas | pallas-interpret | auto | "
                          "auto-interpret)")
+    ap.add_argument("--layout", default="dense,packed",
+                    help="comma-separated visited-set layouts to bench "
+                         "(dense | packed)")
+    ap.add_argument("--no-scale", action="store_true",
+                    help="skip the 262144-node large-preset scale run")
     args = ap.parse_args()
-    main(quick=args.quick, backends=tuple(args.backend.split(",")))
+    main(quick=args.quick, backends=tuple(args.backend.split(",")),
+         layouts=tuple(args.layout.split(",")), scale=not args.no_scale)

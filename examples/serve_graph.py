@@ -14,11 +14,13 @@ single-host engine scans over), and once arrivals stop the backlog drains
 through arrival-free bursts -- continuous batching on the mesh path.
 
     PYTHONPATH=src python examples/serve_graph.py [--bursts 8] \
-        [--backend scatter|pallas|auto]
+        [--backend scatter|pallas|auto] [--visited-layout dense|packed]
 
 `--backend` selects the frontier-expansion backend the per-device engine
 step runs (the Pallas compare-reduce kernel vs the XLA scatter reference,
-or the per-hop density `auto` switch); results are backend-invariant.
+or the per-hop density `auto` switch); `--visited-layout` selects the
+visited-set representation (dense (B, n) bool vs bit-packed uint32 words,
+8x less per-query BFS state). Results are invariant under both.
 """
 
 import argparse
@@ -54,6 +56,10 @@ def main():
                              "auto", "auto-interpret"],
                     help="frontier-expansion backend (pallas/auto fall back "
                          "to the kernel interpreter off-TPU)")
+    ap.add_argument("--visited-layout", default="dense",
+                    choices=["dense", "packed"],
+                    help="visited-set representation: dense (B, n) bool vs "
+                         "bit-packed (B, ceil(n/32)) uint32 (8x smaller)")
     args = ap.parse_args()
 
     g = powerlaw_graph(n=args.nodes, m=6, seed=0)
@@ -76,8 +82,13 @@ def main():
         n_storage_shards=1, queries_per_proc=qpp, hops=args.hops,
         max_frontier=1024, cache_sets=2048, cache_ways=4,
         read_capacity=4096, chain_depth=8, expand_backend=args.backend,
+        visited_layout=args.visited_layout,
     )
-    print(f"expansion backend: {args.backend}")
+    from repro.core.visited import visited_nbytes
+    print(f"expansion backend: {args.backend}; visited layout: "
+          f"{args.visited_layout} "
+          f"({visited_nbytes(args.visited_layout, qpp, g.n)} bytes/round of "
+          f"per-query visited state)")
     step = jax.jit(make_distributed_serve_step(mesh, cfg))
     store = make_serving_storage(tier)
 

@@ -2,10 +2,11 @@
 
 Algorithm 5 interleaves BFS with (a) cache probes and (b) batched storage
 requests for the misses. The scalar queue/set version does not map to TPU;
-this engine keeps the same semantics with dense, fixed-shape state:
+this engine keeps the same semantics with fixed-shape state:
 
   frontier      (B, F) int32   padded -1 (F = max frontier width)
-  visited       (B, n) bool    the resultSet bitmap, one row per query
+  visited       the resultSet bitmap, one row per query, in the LAYOUT
+                selected by `EngineConfig.visited_layout` (see below)
   cache         CacheState     shared by the whole processor (as in paper)
 
 Per hop (== one iteration of Algorithm 5's while loop):
@@ -16,27 +17,37 @@ Per hop (== one iteration of Algorithm 5's while loop):
      (`nonzero(size=F)` keeps shapes static; overflow beyond F is recorded
      in `truncated` -- with F sized to the h-hop ball this never triggers)
 
-Step 4 -- the visited-bitmap update, the per-round hot loop -- is a
-pluggable EXPANSION BACKEND (`EngineConfig.expand_backend`), one protocol
-with two implementations plus a selector:
+Step 4 -- the visited-bitmap update, the per-round hot loop -- sits behind
+TWO composed seams (both python-static, resolved once per trace):
 
-  - "scatter": the XLA `.at[].max()` dense scatter (reference backend;
-    wins for sparse frontiers / CPU);
-  - "pallas": ONE `kernels.frontier.frontier_expand_batched` compare-reduce
-    launch expands the whole batch, grid (query, node-block,
-    frontier-block) -- scatter-free, the TPU path ("pallas-interpret" runs
-    the identical kernel program via the interpreter on CPU);
-  - "auto": `lax.cond` on `kernels.frontier.dense_frontier` per hop --
-    dense frontiers take the kernel, sparse ones the scatter. (Under the
+  REPRESENTATION (`EngineConfig.visited_layout`, `core.visited`):
+  - "dense":  (B, n) bool -- the reference layout, one byte per node;
+  - "packed": (B, ceil(n/32)) uint32 words, one BIT per node -- 8x less
+    per-query state (the >100K-node scale path); result counts come from
+    `lax.population_count`, set algebra is word-wise bitwise ops.
+
+  EXECUTION (`EngineConfig.expand_backend`), per layout:
+  - "scatter": XLA scatter reference (`.at[].max()` dense; packed scatters
+    a transient dense delta and packs it into the word mask);
+  - "pallas": ONE blocked compare-reduce kernel launch per hop
+    (`kernels.frontier.frontier_expand_batched` for dense, grid (query,
+    node-block, frontier-block); `frontier_expand_packed` for packed, grid
+    (query, word-block, frontier-block) reducing straight into uint32
+    words) -- scatter-free, the TPU path ("pallas-interpret" runs the
+    identical kernel program via the interpreter on CPU);
+  - "auto": `lax.cond` on frontier density per hop -- dense frontiers take
+    the kernel, sparse ones the scatter (the packed layout refines the
+    predicate with word popcounts, `dense_frontier_packed`). (Under the
     single-host engine's vmap over processors the cond's predicate is
     batched and XLA evaluates both branches then selects; inside shard_map
     the predicate is per-device and the cond stays a real branch.)
 
-Every backend must keep the engine<->simulator differential oracle exactly
-green: touch sets, read volumes, and backlog evolution are backend
-INVARIANTS (`tests/test_engine_parity.py` parametrizes over backends, and
-`tests/test_expand_backends.py` sweeps the backends against each other
-across frontier/bitmap shapes).
+Every (layout, backend) pair must keep the engine<->simulator differential
+oracle exactly green: touch sets, read volumes, and backlog evolution are
+representation AND execution invariants (`tests/test_engine_parity.py`
+parametrizes over both axes, `tests/test_expand_backends.py` sweeps the
+backends against each other across frontier/bitmap shapes, and
+`tests/test_visited_properties.py` is the layout property gate).
 
 Three query types (paper §2.2) share the BFS core:
   - h-hop neighbor aggregation: |visited| - 1 (or label histogram)
@@ -58,8 +69,13 @@ import numpy as np
 from repro.core import cache as cache_lib
 from repro.core.cache import CacheState
 from repro.core.storage import StorageTier, multi_read_ref
-from repro.kernels.frontier import dense_frontier, frontier_expand_batched
-from repro.kernels.ops import on_tpu
+# The expansion backends and visited-set layouts live in core.visited; the
+# names below are re-exported here because this module is their historical
+# home (PR 3 pinned the backend seam's public surface here).
+from repro.core.visited import (  # noqa: F401  (re-exports)
+    EXPAND_BACKENDS, VISITED_LAYOUTS, get_expand_backend, get_visited_layout,
+    visited_nbytes,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,12 +86,17 @@ class EngineConfig:
     #                         continuation, so typical cost is 1-2 iterations)
     use_cache: bool = True
     # frontier-expansion backend: how step 4 (neighbors -> visited bitmap)
-    # executes. One of EXPAND_BACKENDS: "scatter" (XLA .at[].max, the
-    # reference), "pallas" (batched compare-reduce kernel, one launch per
+    # executes. One of EXPAND_BACKENDS: "scatter" (XLA scatter, the
+    # reference), "pallas" (blocked compare-reduce kernel, one launch per
     # hop), "auto" (lax.cond on frontier density per hop), or the
     # "-interpret" variants that force the Pallas interpreter (CPU tests).
     # Semantics are backend-invariant; only the execution strategy changes.
     expand_backend: str = "scatter"
+    # visited-set layout: how the per-query resultSet bitmap is REPRESENTED.
+    # One of VISITED_LAYOUTS: "dense" ((B, n) bool, the reference) or
+    # "packed" ((B, ceil(n/32)) uint32 words, 8x smaller -- the >100K-node
+    # scale path). Semantics are layout-invariant (core.visited).
+    visited_layout: str = "dense"
     # when the engine runs INSIDE shard_map and multi_read contains
     # collectives (all_to_all), every participant must run the same number of
     # chain iterations: the loop condition is then psum'd over these axes.
@@ -83,7 +104,8 @@ class EngineConfig:
 
 
 class HopResult(NamedTuple):
-    visited: jax.Array  # (B, n) bool
+    visited: jax.Array  # per-query visited set IN THE CONFIGURED LAYOUT:
+    #                     (B, n) bool (dense) or (B, ceil(n/32)) uint32 (packed)
     frontier: jax.Array  # (B, F) int32
     cache: CacheState
     truncated: jax.Array  # (B,) bool -- frontier overflow happened
@@ -165,67 +187,6 @@ def _read_rows(
     return rows, deg, cont, cache_state, n_probe_miss, n_reads, n_touch
 
 
-# ---------------------------------------------------------------------------
-# Frontier-expansion backends: the pluggable step-4 seam.
-#
-# Protocol: fn(rows (B, F, W) int32, deg (B, F) int32, mask (B, n) bool)
-# -> mask' with every valid neighbor marked. Valid = row id >= 0, within the
-# row's degree, and < n (continuation-row ids >= n are engine-internal and
-# never enter the bitmap). All backends are semantically identical; the
-# engine<->simulator oracle must stay green under any of them.
-# ---------------------------------------------------------------------------
-
-EXPAND_BACKENDS = ("scatter", "pallas", "pallas-interpret", "auto", "auto-interpret")
-
-
-def _scatter_expand(rows_b: jax.Array, deg_b: jax.Array, mask: jax.Array,
-                    n: int) -> jax.Array:
-    """Reference backend: dense per-query scatter via XLA `.at[].max()`."""
-    B, F, W = rows_b.shape
-    width_ok = jnp.arange(W)[None, None, :] < deg_b[:, :, None]
-    nbr_valid = (rows_b >= 0) & width_ok & (rows_b < n)
-    flat_nbrs = jnp.where(nbr_valid, rows_b, 0).reshape(B, F * W)
-    flat_ok = nbr_valid.reshape(B, F * W)
-    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, F * W))
-    return mask.at[bidx, flat_nbrs].max(flat_ok)
-
-
-def _pallas_expand(rows_b: jax.Array, deg_b: jax.Array, mask: jax.Array,
-                   n: int, interpret: bool) -> jax.Array:
-    """Batched compare-reduce kernel: one launch expands the whole batch.
-
-    Row ids >= n (continuation rows / out-of-range) are masked to -1 pad
-    before the kernel; width masking rides the kernel's own deg clip.
-    """
-    rows_in = jnp.where(rows_b < n, rows_b, -1)
-    return frontier_expand_batched(rows_in, deg_b, mask, interpret=interpret)
-
-
-def get_expand_backend(name: str, n: int) -> Callable:
-    """Resolve a backend name to the protocol callable (python-static).
-
-    "pallas"/"auto" pick interpret mode automatically off-TPU so the same
-    config runs everywhere; "-interpret" forces it (CI's CPU kernel path).
-    """
-    if name not in EXPAND_BACKENDS:
-        raise ValueError(f"unknown expand_backend {name!r}; one of {EXPAND_BACKENDS}")
-    if name == "scatter":
-        return functools.partial(_scatter_expand, n=n)
-    interpret = name.endswith("-interpret") or not on_tpu()
-    if name.startswith("pallas"):
-        return functools.partial(_pallas_expand, n=n, interpret=interpret)
-
-    def auto(rows_b, deg_b, mask):
-        return jax.lax.cond(
-            dense_frontier(deg_b, n),
-            lambda r, d, m: _pallas_expand(r, d, m, n=n, interpret=interpret),
-            lambda r, d, m: _scatter_expand(r, d, m, n=n),
-            rows_b, deg_b, mask,
-        )
-
-    return auto
-
-
 def expand_hop(
     tier_arrays,
     cache_state: CacheState,
@@ -237,11 +198,13 @@ def expand_hop(
 ) -> HopResult:
     """One BFS hop for a batch of queries sharing one processor cache.
 
-    The visited-bitmap update delegates to the expansion backend selected
-    by `cfg.expand_backend` (resolved once, python-static)."""
+    `visited` is in the layout selected by `cfg.visited_layout`; the
+    visited-bitmap update delegates to that layout's expansion backend
+    (`cfg.expand_backend`). Both seams resolve once, python-static."""
     B, F = frontier.shape
     W = cache_state.row_width
-    expand_fn = get_expand_backend(cfg.expand_backend, n)
+    layout = get_visited_layout(cfg.visited_layout)
+    expand_fn = layout.expander(cfg.expand_backend, n)
 
     def _global_any(flag: jax.Array) -> jax.Array:
         """Uniform loop decision: when multi_read contains collectives, every
@@ -258,7 +221,10 @@ def expand_hop(
         reads_total = reads_total + n_reads
         touch_total = touch_total + n_touch
         probe_total = probe_total + n_probe_miss
-        # mark neighbors in the per-query delta bitmap (pluggable backend)
+        # mark neighbors in the per-query mask (pluggable backend). The mask
+        # carries visited | this-hop's marks, not a bare delta, so the
+        # packed auto backend's popcount density predicate sees the TRUE
+        # bitmap occupancy (already-visited bits can't yield new marks).
         new_mask = expand_fn(rows.reshape(B, F, W), deg.reshape(B, F), new_mask)
         # continuation rows (hub nodes whose adjacency spans multiple rows)
         # are drained in the same hop, as in Algorithm 5's per-hop multi_read
@@ -273,7 +239,7 @@ def expand_hop(
     frontier_flat = frontier.reshape(-1)
     init = (
         frontier_flat,
-        jnp.zeros((B, n), dtype=bool),
+        visited,
         cache_state,
         jnp.zeros((), jnp.int32),
         jnp.zeros((), jnp.int32),
@@ -285,11 +251,17 @@ def expand_hop(
         _ids, new_mask, cache_state, reads_total, touch_total, probe_total, _it, _go
     ) = jax.lax.while_loop(chain_cond, chain_body, init)
 
-    newly = new_mask & ~visited
-    visited = visited | new_mask
-    # next frontier = up to F newly-visited nodes per query
-    nxt = jax.vmap(lambda m: jnp.nonzero(m, size=F, fill_value=-1)[0].astype(jnp.int32))(newly)
-    n_new = jnp.sum(newly, axis=1)
+    # new_mask == visited | hop marks: the chain carry was seeded with
+    # visited and every backend only ORs bits in, so it is already the
+    # updated visited set -- no union pass needed in the hot loop
+    newly = layout.minus(new_mask, visited)
+    visited = new_mask
+    # next frontier = up to F newly-visited nodes per query. `nonzero`
+    # needs node positions, so the packed layout unpacks its DELTA here --
+    # a per-hop transient XLA can fuse, not state carried across hops.
+    newly_dense = layout.to_dense(newly, n)
+    nxt = jax.vmap(lambda m: jnp.nonzero(m, size=F, fill_value=-1)[0].astype(jnp.int32))(newly_dense)
+    n_new = jnp.sum(newly_dense, axis=1)
     # truncated if the frontier overflowed F, OR the continuation chain was
     # cut off by the chain_depth cap while rows still had continuations
     truncated = (n_new > F) | _go
@@ -341,11 +313,8 @@ def run_neighbor_aggregation(
     """
     B = queries.shape[0]
     F = cfg.max_frontier
-    visited = jnp.zeros((B, n), dtype=bool)
-    valid_q = queries >= 0
-    visited = visited.at[jnp.arange(B), jnp.maximum(queries, 0)].set(valid_q)
-    frontier = jnp.full((B, F), -1, jnp.int32)
-    frontier = frontier.at[:, 0].set(jnp.where(valid_q, queries, -1))
+    layout = get_visited_layout(cfg.visited_layout)
+    visited, frontier, valid_q = layout.init_search(queries, n, F)
 
     misses = jnp.zeros((), jnp.int32)
     reads = jnp.zeros((), jnp.int32)
@@ -364,9 +333,10 @@ def run_neighbor_aggregation(
         touched = touched + res.touched
         truncated = truncated | res.truncated
 
-    counts = jnp.sum(visited, axis=1) - valid_q.astype(jnp.int32)  # exclude query node
+    sizes = layout.count(visited)
+    counts = sizes - valid_q.astype(jnp.int32)  # exclude query node
     stats = QueryStats(
-        touched=touched, misses=misses, result_sizes=jnp.sum(visited, 1),
+        touched=touched, misses=misses, result_sizes=sizes,
         truncated=truncated, reads=reads,
     )
     return counts, cache_state, stats, touched_map
@@ -429,15 +399,12 @@ def run_reachability(
     serves both directions). Returns reachable (B,) bool."""
     B = sources.shape[0]
     F = cfg.max_frontier
+    layout = get_visited_layout(cfg.visited_layout)
     h_fwd = (h + 1) // 2
     h_bwd = h - h_fwd
 
     def bfs(starts, hops, cache_state):
-        visited = jnp.zeros((B, n), dtype=bool)
-        vq = starts >= 0
-        visited = visited.at[jnp.arange(B), jnp.maximum(starts, 0)].set(vq)
-        frontier = jnp.full((B, F), -1, jnp.int32)
-        frontier = frontier.at[:, 0].set(jnp.where(vq, starts, -1))
+        visited, frontier, _vq = layout.init_search(starts, n, F)
         m = jnp.zeros((), jnp.int32)
         r = jnp.zeros((), jnp.int32)
         t = jnp.zeros((), jnp.int32)
@@ -451,11 +418,11 @@ def run_reachability(
 
     vis_f, cache_state, m1, r1, t1, tr1 = bfs(sources, h_fwd, cache_state)
     vis_b, cache_state, m2, r2, t2, tr2 = bfs(targets, h_bwd, cache_state)
-    reachable = jnp.any(vis_f & vis_b, axis=1)
+    reachable = layout.overlap_any(vis_f, vis_b)
     stats = QueryStats(
         touched=t1 + t2,
         misses=m1 + m2,
-        result_sizes=jnp.sum(vis_f | vis_b, 1),
+        result_sizes=layout.count(layout.union(vis_f, vis_b)),
         truncated=tr1 | tr2,
         reads=r1 + r2,
         truncated_fwd=tr1,

@@ -19,6 +19,15 @@ The simulator's per-processor cache is a plain LRU (OrderedDict), i.e. the
 paper's exact eviction policy; the device path's set-associative LRU is
 validated against it in tests.
 
+The simulator deliberately stays SCALAR -- python sets for visited state,
+whatever the engine's `visited_layout` (dense bool rows or bit-packed
+uint32 words) is doing. Parity never compares raw bitmap words: the engine
+reports layout-independent observables (result counts via popcount/sum,
+touch sets from the dense per-processor touch bitmap, read volumes,
+backlog evolution), which is exactly what makes the oracle a
+representation-invariance check -- a packed-layout bug shows up as a
+touch-set or count divergence here, not as a word-format mismatch.
+
 ``ServingSimulator.run_rounds`` is the queue-aware mirror of the engine's
 continuous-batching loop: the same bounded carry-over backlog (offered
 ahead of fresh arrivals), the same bounded dispatch (a numpy mirror of

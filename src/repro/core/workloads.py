@@ -10,10 +10,10 @@ three query types):
   - uniform:          1000 uniform query nodes.
   - drifting hotspot: hotspot centers random-walk between phases -- the
                       locality a smart router must track ONLINE (EMA drift).
-  - anti-locality:    adversarial stream of distinct nodes with consecutive
-                      queries maximally separated -- the no-reuse worst case
-                      where caching cannot help and routing must fall back
-                      to pure load balance.
+  - anti-locality:    adversarial stream of distinct nodes, every window
+                      spread out in id space (golden-ratio stride) -- the
+                      no-reuse worst case where caching cannot help and
+                      routing must fall back to pure load balance.
 """
 
 from __future__ import annotations
@@ -145,14 +145,22 @@ def drifting_hotspot_workload(
 
 
 def antilocality_workload(g: CSRGraph, n_queries: int = 256, seed: int = 0) -> Workload:
-    """Adversarial anti-locality stream: distinct query nodes, consecutive
-    queries maximally separated in node-id space. Generators lay communities
-    out in contiguous id ranges, so a large id-stride (coprime with n, hence
-    a full permutation cycle) destroys both temporal reuse (no node repeats)
-    and topological reuse (consecutive balls live in different communities)."""
+    """Adversarial anti-locality stream: distinct query nodes, every WINDOW
+    of queries spread out in node-id space. Generators lay communities out
+    in contiguous id ranges, so an equidistributing id-stride (coprime with
+    n, hence a full permutation cycle) destroys temporal reuse (no node
+    repeats) and topological reuse (nearby balls never share a window).
+
+    The stride is the golden-ratio conjugate of n, not n/2: a ~n/2 stride
+    only separates ADJACENT queries -- queries two apart land on adjacent
+    ids, so any batch larger than two re-creates the community locality the
+    stream exists to destroy (and locality-aware routers then harvest it).
+    The golden stride is the classic low-discrepancy choice (three-distance
+    theorem): every window of k consecutive queries has pairwise id
+    distance ~n/k, for all k at once -- anti-local at every batch size."""
     rng = np.random.default_rng(seed)
     n_queries = min(n_queries, g.n)
-    stride = max(g.n // 2 - 1, 1)
+    stride = max(round(g.n * 0.6180339887498949), 1)
     while stride > 1 and math.gcd(stride, g.n) != 1:
         stride -= 1
     start = int(rng.integers(g.n))
@@ -165,6 +173,45 @@ def antilocality_workload(g: CSRGraph, n_queries: int = 256, seed: int = 0) -> W
         targets=targets,
         hotspot_id=np.full(qn.size, -1, np.int32),
     )
+
+
+def preset_workload(
+    preset: str = "large",
+    n_queries: int = 64,
+    seed: int = 0,
+    graph: Optional[CSRGraph] = None,
+) -> Tuple[CSRGraph, Workload]:
+    """Graph + mixed stream for a named power-law scale preset.
+
+    Builds `repro.graph.generators.powerlaw_preset(preset)` (or reuses
+    `graph`) and a half-hotspot / half-uniform query stream over it -- the
+    shape the serving benches drive the visited-layout scale runs with: the
+    hotspot half warms caches (locality still matters at scale), the
+    uniform half sprays the full id range so every word block of a packed
+    visited set is exercised. The "large" preset (>200K nodes) is the
+    scale the bit-packed layout exists for.
+    """
+    from repro.graph.generators import powerlaw_preset
+
+    g = graph if graph is not None else powerlaw_preset(preset, seed=seed)
+    n_hot_q = n_queries // 2
+    qph = min(8, max(1, n_hot_q))
+    hot = hotspot_workload(
+        g, r=1, n_hotspots=max(1, n_hot_q // qph), queries_per_hotspot=qph,
+        seed=seed,
+    )
+    uni = uniform_workload(
+        g, n_queries=max(0, n_queries - hot.query_nodes.size), seed=seed + 1)
+    # the hotspot half rounds to whole hotspots; trim so callers sizing
+    # rounds/memory off n_queries get EXACTLY n_queries back
+    wl = Workload(
+        name=f"preset-{preset}",
+        query_nodes=np.concatenate([hot.query_nodes, uni.query_nodes])[:n_queries],
+        query_types=np.concatenate([hot.query_types, uni.query_types])[:n_queries],
+        targets=np.concatenate([hot.targets, uni.targets])[:n_queries],
+        hotspot_id=np.concatenate([hot.hotspot_id, uni.hotspot_id])[:n_queries],
+    )
+    return g, wl
 
 
 def uniform_workload(g: CSRGraph, n_queries: int = 1000, seed: int = 0) -> Workload:

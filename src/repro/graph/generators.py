@@ -66,6 +66,27 @@ def powerlaw_graph(n: int, m: int = 8, seed: int = 0, bidirect: bool = True) -> 
     return make_bidirected(g) if bidirect else g
 
 
+# Named scale presets for the serving benchmarks and the visited-layout
+# scale runs. "large" is deliberately past the dense visited-bitmap comfort
+# zone (ROADMAP's >100K-node wall): at 256K nodes one round's per-query
+# dense bool state is B * 256KB, while the bit-packed layout carries
+# B * 32KB -- the representation the preset exists to exercise. n is kept a
+# multiple of 32 so packed rows have no partial trailing word.
+POWERLAW_PRESETS = {
+    "small": dict(n=4_800, m=6),  # simulator/test scale
+    "medium": dict(n=48_000, m=8),  # dense still fine; cross-check scale
+    "large": dict(n=262_144, m=8),  # >200K nodes: packed-layout territory
+}
+
+
+def powerlaw_preset(name: str, seed: int = 0, bidirect: bool = True) -> CSRGraph:
+    """Build a named power-law preset (see POWERLAW_PRESETS)."""
+    if name not in POWERLAW_PRESETS:
+        raise ValueError(
+            f"unknown preset {name!r}; one of {tuple(POWERLAW_PRESETS)}")
+    return powerlaw_graph(seed=seed, bidirect=bidirect, **POWERLAW_PRESETS[name])
+
+
 def community_graph(
     n: int,
     community_size: int = 60,

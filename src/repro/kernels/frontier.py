@@ -19,14 +19,28 @@ the engine's `auto` expansion backend. Both paths are semantically
 identical (tests sweep shapes; `tests/test_expand_backends.py` is the
 backend-differential oracle).
 
-Entry points (one kernel program):
+Entry points (two kernel programs sharing one compare-reduce core):
 
   - `frontier_expand_batched`  -- whole admitted batch: rows (B, F, W),
-    visited (B, n); grid (query, node-block, frontier-block) so ONE kernel
-    launch expands every query of a processor round. This is the variant
-    `core.query_engine.expand_hop` mounts behind the `pallas` backend.
+    visited (B, n) bool; grid (query, node-block, frontier-block) so ONE
+    kernel launch expands every query of a processor round. This is the
+    variant `core.query_engine.expand_hop` mounts behind the `pallas`
+    backend of the DENSE visited layout.
+  - `frontier_expand_packed`   -- the BIT-PACKED variant: visited is
+    (B, ceil(n/32)) uint32 words (8x smaller than the bool bitmap), grid
+    (query, word-block, frontier-block). Each step runs the same
+    compare-reduce over the bw*32 node ids a word block covers, then packs
+    the hit mask into uint32 words (sum of distinct `1 << bit` powers ==
+    OR) before ORing into the output block. This is the `pallas` backend
+    of the PACKED visited layout (`core.visited.PackedVisited`) -- the
+    representation that unblocks >100K-node visited state.
   - `frontier_expand`          -- single query: rows (F, W), visited (n,);
-    a thin B=1 view over the batched kernel.
+    a thin B=1 view over the batched dense kernel.
+
+Word-layout helpers (`pack_words` / `unpack_words` / `n_words`) live here
+too: the packed kernel defines the word order (little-endian bits, node id
+= word * 32 + bit), so the pure-jnp pack/unpack math is co-located with it
+and `core.visited` consumes both.
 
 Grid ordering: the frontier-block axis is a reduction (every frontier block
 ORs into the same visited block), so it is the INNERMOST (fastest-varying)
@@ -51,7 +65,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BF = 128  # frontier rows per block
-DEFAULT_BN = 512  # visited nodes per block
+DEFAULT_BN = 512  # visited nodes per block (dense kernel)
+WORD_BITS = 32  # packed layout: node id = word * 32 + bit (little-endian)
+DEFAULT_BW = 16  # packed words per visited block (= DEFAULT_BN bits)
 DENSE_RATIO = 8  # compare-reduce pays off once candidates >= n / DENSE_RATIO
 
 # trace-regression instrumentation: each retrace of a jitted padded kernel
@@ -73,6 +89,58 @@ def dense_frontier(deg: jax.Array, n: int, ratio: int = DENSE_RATIO) -> jax.Arra
         bits *= d
     bits *= n
     return jnp.sum(deg) * ratio >= bits
+
+
+# ---------------------------------------------------------------------------
+# Packed-word layout math. The kernel below fixes the word order (node id =
+# word * WORD_BITS + bit); these jnp helpers are the same layout in pure XLA
+# and are what `core.visited.PackedVisited` packs/unpacks with.
+# ---------------------------------------------------------------------------
+
+
+def n_words(n: int) -> int:
+    """uint32 words needed for an n-bit visited row."""
+    return -(-n // WORD_BITS)
+
+
+def pack_words(dense: jax.Array) -> jax.Array:
+    """(..., n) bool -> (..., ceil(n/32)) uint32; bit b of word w = node
+    w*32+b. Padding bits (>= n) are zero, so popcounts stay exact."""
+    n = dense.shape[-1]
+    nw = n_words(n)
+    x = _pad_axis(dense, dense.ndim - 1, nw * WORD_BITS - n, False)
+    x = x.reshape(dense.shape[:-1] + (nw, WORD_BITS)).astype(jnp.uint32)
+    bits = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(x << bits, axis=-1).astype(jnp.uint32)
+
+
+def unpack_words(words: jax.Array, n: int) -> jax.Array:
+    """(..., ceil(n/32)) uint32 -> (..., n) bool (inverse of pack_words)."""
+    bits = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    x = (words[..., None] >> bits) & jnp.uint32(1)
+    x = x.reshape(words.shape[:-1] + (words.shape[-1] * WORD_BITS,))
+    return x[..., :n].astype(bool)
+
+
+def dense_frontier_packed(
+    deg: jax.Array, visited_words: jax.Array, n: int, ratio: int = DENSE_RATIO
+) -> jax.Array:
+    """Popcount-refined density heuristic for the packed layout.
+
+    Same shape as `dense_frontier`, but the candidate count is weighed
+    against the UNVISITED bit budget (total bits minus the word popcounts):
+    already-set bits cannot yield new marks, so as the bitmap fills the
+    scatter path's useful-work fraction shrinks and the fixed-cost
+    compare-reduce pass wins earlier. On the packed words the occupancy is
+    one `population_count` reduction -- effectively free, which is the point
+    of keeping the heuristic ON the packed representation."""
+    bits = 1
+    for d in deg.shape[:-1]:
+        bits *= d
+    bits *= n
+    occupied = jnp.sum(jax.lax.population_count(visited_words)).astype(jnp.int32)
+    unvisited = jnp.maximum(bits - occupied, 0)
+    return jnp.sum(deg) * ratio >= unvisited
 
 
 def _compare_reduce(rows, deg, bn: int, b):
@@ -161,3 +229,77 @@ def frontier_expand_batched(
     vis = _pad_axis(visited, 1, (-n) % bn, False)
     out = _frontier_batched_padded(rows, deg, vis, bf=bf, bn=bn, interpret=interpret)
     return out[:, :n]
+
+
+# ---------------------------------------------------------------------------
+# Bit-packed blocked kernel: visited as (B, ceil(n/32)) uint32 words
+# ---------------------------------------------------------------------------
+
+
+def _frontier_packed_kernel(rows_ref, deg_ref, vis_in_ref, vis_out_ref, *, bw: int):
+    b, f = pl.program_id(1), pl.program_id(2)
+    # same compare-reduce core over the bw*32 node ids this word block
+    # covers, then pack: bits are distinct powers of two, so the sum over
+    # the bit axis IS the bitwise OR of the hit mask
+    hit = _compare_reduce(rows_ref[0], deg_ref[0], bw * WORD_BITS, b)
+    bits = jax.lax.broadcasted_iota(jnp.uint32, (bw, WORD_BITS), 1)
+    words = jnp.sum(
+        hit.reshape(bw, WORD_BITS).astype(jnp.uint32) << bits, axis=1
+    ).astype(jnp.uint32)
+
+    @pl.when(f == 0)
+    def _first():
+        vis_out_ref[...] = vis_in_ref[...] | words[None, :]
+
+    @pl.when(f != 0)
+    def _rest():
+        vis_out_ref[...] = vis_out_ref[...] | words[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bf", "bw", "interpret"))
+def _frontier_packed_padded(rows, deg, vis, *, bf: int, bw: int, interpret: bool):
+    TRACE_COUNTS["frontier_expand_packed"] += 1
+    B, Fp, W = rows.shape
+    nwpad = vis.shape[1]
+    return pl.pallas_call(
+        functools.partial(_frontier_packed_kernel, bw=bw),
+        grid=(B, nwpad // bw, Fp // bf),
+        in_specs=[
+            pl.BlockSpec((1, bf, W), lambda q, b, f: (q, f, 0)),
+            pl.BlockSpec((1, bf), lambda q, b, f: (q, f)),
+            pl.BlockSpec((1, bw), lambda q, b, f: (q, b)),
+        ],
+        out_specs=pl.BlockSpec((1, bw), lambda q, b, f: (q, b)),
+        out_shape=jax.ShapeDtypeStruct((B, nwpad), vis.dtype),
+        interpret=interpret,
+    )(rows, deg, vis)
+
+
+def frontier_expand_packed(
+    rows: jax.Array,  # (B, F, W) int32 adjacency rows of every query, -1 padded
+    deg: jax.Array,  # (B, F) int32
+    visited_words: jax.Array,  # (B, ceil(n/32)) uint32 packed bitmap
+    n: int,  # bitmap width in BITS (<= words * 32)
+    bf: int = DEFAULT_BF,
+    bw: int = DEFAULT_BW,
+    interpret: bool = False,
+) -> jax.Array:
+    """One BFS hop over the BIT-PACKED visited layout, one kernel launch.
+
+    grid = (query, word-block, frontier-block); each word block covers
+    bw * 32 node ids and ORs packed hit words into the output -- the
+    frontier axis stays innermost (same TPU-legal revisit pattern as the
+    dense kernel). `n` is needed explicitly because the word array
+    over-covers the id range: ids in [n, words*32) are masked to pad here
+    so padding bits inside the last word stay zero and popcount-based
+    result counts stay exact. Same pad-up-never-clamp bucketing as the
+    dense kernel (F to whole bf blocks, words to whole bw blocks)."""
+    B, F, W = rows.shape
+    nw = visited_words.shape[1]
+    assert nw * WORD_BITS >= n, (nw, n)
+    rows = jnp.where(rows < n, rows, -1)
+    rows = _pad_axis(rows, 1, (-F) % bf, -1)
+    deg = _pad_axis(deg, 1, (-F) % bf, 0)
+    vis = _pad_axis(visited_words, 1, (-nw) % bw, 0)
+    out = _frontier_packed_padded(rows, deg, vis, bf=bf, bw=bw, interpret=interpret)
+    return out[:, :nw]

@@ -17,7 +17,11 @@ from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.segment_reduce import segment_sum as _segsum_pallas
 from repro.kernels.embedding_bag import embedding_bag as _bag_pallas
-from repro.kernels.frontier import frontier_expand as _frontier_pallas
+from repro.kernels.frontier import (
+    frontier_expand as _frontier_pallas,
+    frontier_expand_packed as _frontier_packed_pallas,
+    pack_words, unpack_words,
+)
 
 
 def on_tpu() -> bool:
@@ -109,3 +113,27 @@ def frontier_expand(rows, deg, visited, use_pallas="auto", interpret: bool = Fal
             rows, deg, visited, interpret=interpret or not _on_tpu()
         )
     return _ref.frontier_expand_ref(rows, deg, visited)
+
+
+def frontier_expand_packed(
+    rows, deg, visited_words, n: int, use_pallas="auto", interpret: bool = False
+):
+    """Single-query visited update on the BIT-PACKED word layout.
+
+    rows (F, W) int32, deg (F,), visited_words (ceil(n/32),) uint32. The
+    Pallas path runs the blocked packed kernel (`kernels.frontier`); the
+    reference path unpacks to the dense bool oracle, expands, and re-packs
+    -- bit-identical by the pack/unpack roundtrip property
+    (tests/test_visited_properties.py). The word layout also makes frontier
+    DENSITY cheap: occupancy is one `lax.population_count` reduction over
+    the words (see `kernels.frontier.dense_frontier_packed`, the heuristic
+    the packed `auto` expansion backend branches on).
+    """
+    if _pick(use_pallas):
+        return _frontier_packed_pallas(
+            rows[None], deg[None], visited_words[None], n,
+            interpret=interpret or not _on_tpu(),
+        )[0]
+    rows_in = jnp.where(rows < n, rows, -1)
+    dense = unpack_words(visited_words, n)
+    return pack_words(_ref.frontier_expand_ref(rows_in, deg, dense))

@@ -24,14 +24,19 @@ entire router -> processor -> storage pipeline, end to end:
                               queries' h-hop balls via `expand_hop`, i.e.
                               set-associative `cache_lookup`/`cache_insert`
                               with batched storage `multi_read` for misses.
-                              The visited-bitmap update inside `expand_hop`
-                              is the pluggable expansion backend
+                              The visited bitmap inside `expand_hop` sits
+                              behind two composed seams: its REPRESENTATION
+                              (`EngineRunConfig.visited_layout`: "dense"
+                              (B, n) bool vs "packed" (B, ceil(n/32))
+                              uint32 words, 8x smaller per-query state) and
+                              its update EXECUTION
                               (`EngineRunConfig.expand_backend`): "scatter"
-                              (XLA reference), "pallas" (one batched
+                              (XLA reference), "pallas" (one blocked
                               compare-reduce kernel launch per hop), or
                               "auto" (`lax.cond` on frontier density).
-                              Backends are semantically interchangeable --
-                              the parity oracle runs under every one;
+                              Layouts and backends are semantically
+                              interchangeable -- the parity oracle runs
+                              over the full grid;
   5. ack                   -- router load decremented by routed counts;
                               per-round QueryStats (hit rate, storage
                               reads, backlog depth, drops, latency-in-
@@ -265,6 +270,11 @@ class EngineRunConfig:
     # repro.core.query_engine.EXPAND_BACKENDS): "scatter" | "pallas" |
     # "auto" (+ "-interpret" variants forcing the Pallas interpreter).
     expand_backend: str = "scatter"
+    # visited-set layout threaded into every processor_round (see
+    # repro.core.visited.VISITED_LAYOUTS): "dense" ((B, n) bool reference)
+    # | "packed" ((B, ceil(n/32)) uint32 words, 8x smaller per-query BFS
+    # state -- the >100K-node scale path). Layout-invariant semantics.
+    visited_layout: str = "dense"
     # K: carry-over admission queue slots. Queries `capacity_dispatch` cannot
     # place are parked here and re-offered ahead of fresh arrivals; overflow
     # beyond K drops the OLDEST waiters. 0 = no carry-over: overflow is
@@ -389,6 +399,7 @@ class ServingEngine:
             chain_depth=cfg.chain_depth,
             use_cache=cfg.use_cache,
             expand_backend=cfg.expand_backend,
+            visited_layout=cfg.visited_layout,
         )
         self._run_jit = jax.jit(self._run_scan)
 

@@ -80,6 +80,11 @@ class GServeConfig:
     # density cond stays a REAL branch (per-device predicate), so each
     # processor picks kernel vs scatter per hop independently.
     expand_backend: str = "scatter"
+    # visited-set layout for the per-device engine step (see
+    # repro.core.visited.VISITED_LAYOUTS): "dense" | "packed". The packed
+    # layout cuts each device's per-query BFS state 8x -- the knob that
+    # lets queries_per_proc x n_nodes grow past 100K-node graphs.
+    visited_layout: str = "dense"
     embed_dim: int = 10
     load_factor: float = 20.0
     alpha: float = 0.5
@@ -106,7 +111,8 @@ def make_distributed_serve_step(mesh: Mesh, cfg: GServeConfig):
     # trip count -- the loop condition is psum'd over "model".
     ecfg = EngineConfig(
         max_frontier=cfg.max_frontier, chain_depth=cfg.chain_depth,
-        expand_backend=cfg.expand_backend, sync_axes=(model_ax,)
+        expand_backend=cfg.expand_backend, visited_layout=cfg.visited_layout,
+        sync_axes=(model_ax,)
     )
 
     def local_step(queries, rows, deg, cont, owner, loc, coords, ema, *cache_leaves):

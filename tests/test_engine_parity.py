@@ -17,15 +17,17 @@ routing scheme and every workload:
   - per-processor query counts match exactly,
   - per-processor storage read volumes match exactly.
 
-Backend axis: the engine side runs under BOTH frontier-expansion backends
-(`scatter`, the XLA reference, and `pallas-interpret`, the batched
-compare-reduce kernel executed through the Pallas interpreter on CPU) --
-touch-set / load / read-volume / backlog parity is therefore a BACKEND
-INVARIANCE guarantee, not just a pipeline one. The kernel backend runs the
-full 4-scheme axis on the uniform workload (the remaining workloads ride
-the scatter sweep; the interpreter is ~30x slower, and the fast
-backend-differential gate `tests/test_expand_backends.py` already pins
-bit-identical engine behaviour across backends per shape).
+Backend x layout grid: the engine side runs under BOTH frontier-expansion
+backends (`scatter`, the XLA reference, and `pallas-interpret`, the blocked
+compare-reduce kernels executed through the Pallas interpreter on CPU) AND
+both visited-set layouts (`dense` (B, n) bool vs `packed` (B, ceil(n/32))
+uint32 words) -- touch-set / load / read-volume / backlog parity is
+therefore a BACKEND and REPRESENTATION invariance guarantee, not just a
+pipeline one. The (scatter, dense) reference cell sweeps every workload;
+each remaining cell runs the full 4-scheme axis on the uniform workload
+(the interpreter is ~30x slower, and the fast differential gates
+`tests/test_expand_backends.py` / `tests/test_visited_properties.py`
+already pin bit-identical engine behaviour across cells per shape).
 
 Steal-parity configuration: per-round slot capacity is constrained so
 dispatch-level hard stealing fires; execution parity must still hold under
@@ -69,20 +71,26 @@ HOPS = 2
 SETS, WAYS = 1024, 16  # capacity 16K >> any per-proc working set: cold misses only
 SCHEMES = ("next_ready", "hash", "landmark", "embed")
 BACKENDS = ("scatter", "pallas-interpret")
+LAYOUTS = ("dense", "packed")
 N_QUERIES = 160
 ROUND = 32
 
 
-def _backend_cases(workloads):
-    """(scheme, workload, backend) triples: scatter sweeps every workload,
-    the interpreter-run kernel backend covers all 4 schemes on uniform."""
+def _grid_cases(workloads):
+    """(scheme, workload, backend, layout) cells: the (scatter, dense)
+    reference sweeps every workload; every other backend x layout cell
+    covers all 4 schemes on uniform -- so the full grid holds parity for
+    all four routing schemes."""
     cases = []
     for backend in BACKENDS:
-        wls = workloads if backend == "scatter" else ["uniform"]
-        for scheme in SCHEMES:
-            for wl in wls:
-                cases.append(pytest.param(scheme, wl, backend,
-                                          id=f"{scheme}-{wl}-{backend}"))
+        for layout in LAYOUTS:
+            ref_cell = backend == "scatter" and layout == "dense"
+            wls = workloads if ref_cell else ["uniform"]
+            for scheme in SCHEMES:
+                for wl in wls:
+                    cases.append(pytest.param(
+                        scheme, wl, backend, layout,
+                        id=f"{scheme}-{wl}-{backend}-{layout}"))
     return cases
 
 
@@ -110,11 +118,12 @@ def cluster():
                        embedding=ge, seed=3)
         for scheme in SCHEMES
     }
-    engines = {  # keyed (scheme, backend); jit compiles lazily on first run
-        (scheme, backend): ServingEngine(
+    engines = {  # keyed (scheme, backend, layout); jit compiles lazily on use
+        (scheme, backend, layout): ServingEngine(
             tier, routers[scheme],
-            dataclasses.replace(cfg, expand_backend=backend))
-        for scheme in SCHEMES for backend in BACKENDS
+            dataclasses.replace(cfg, expand_backend=backend,
+                                visited_layout=layout))
+        for scheme in SCHEMES for backend in BACKENDS for layout in LAYOUTS
     }
     return dict(g=g, tier=tier, li=li, ge=ge, routers=routers,
                 engines=engines, balls=BallCache(g))
@@ -141,11 +150,11 @@ def _oracle_sim(cluster, scheme, **kw):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("scheme,wl_name,backend", _backend_cases(WORKLOADS))
-def test_engine_simulator_exact_parity(cluster, scheme, wl_name, backend):
+@pytest.mark.parametrize("scheme,wl_name,backend,layout", _grid_cases(WORKLOADS))
+def test_engine_simulator_exact_parity(cluster, scheme, wl_name, backend, layout):
     g = cluster["g"]
     wl = _workload(g, wl_name)
-    eng = cluster["engines"][(scheme, backend)]
+    eng = cluster["engines"][(scheme, backend, layout)]
     res, _ = eng.run(wl)
 
     # engine sanity: capacity == round_size means dispatch never steals and
@@ -200,10 +209,11 @@ def over_engines(cluster):
         backlog_capacity=OVER_BACKLOG, track_touched=True,
     )
     return {
-        (scheme, backend): ServingEngine(
+        (scheme, backend, layout): ServingEngine(
             cluster["tier"], cluster["routers"][scheme],
-            dataclasses.replace(cfg, expand_backend=backend))
-        for scheme in SCHEMES for backend in BACKENDS
+            dataclasses.replace(cfg, expand_backend=backend,
+                                visited_layout=layout))
+        for scheme in SCHEMES for backend in BACKENDS for layout in LAYOUTS
     }
 
 
@@ -245,16 +255,16 @@ def _assert_queue_parity(res, qres, P):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("scheme,wl_name,backend", _backend_cases(WORKLOADS))
+@pytest.mark.parametrize("scheme,wl_name,backend,layout", _grid_cases(WORKLOADS))
 def test_engine_simulator_queue_parity(cluster, over_engines, scheme, wl_name,
-                                       backend):
+                                       backend, layout):
     """2x-oversubscribed arrivals: the jit scan's backlog ring and the
     round-based python mirror must evolve identically -- backlog depth per
     round, completion round per query, drop sets, placement, touch sets --
-    under every expansion backend."""
+    under every expansion backend and visited layout."""
     g = cluster["g"]
     wl = _workload(g, wl_name)
-    res, _ = over_engines[(scheme, backend)].run(wl)
+    res, _ = over_engines[(scheme, backend, layout)].run(wl)
 
     # overload sanity: the ring actually absorbed overflow and drained
     assert res.peak_backlog > 0 and res.final_backlog == 0
@@ -281,13 +291,15 @@ def test_engine_simulator_queue_parity(cluster, over_engines, scheme, wl_name,
 
 @pytest.mark.slow
 @pytest.mark.parametrize("backend", BACKENDS)
-def test_engine_queue_parity_independent_hash(cluster, over_engines, backend):
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_engine_queue_parity_independent_hash(cluster, over_engines, backend,
+                                              layout):
     """Hash routing is integer arithmetic: the simulator can route for
     itself (no replay), making engine and mirror FULLY independent -- the
-    strongest form of the queue-aware oracle, held per backend."""
+    strongest form of the queue-aware oracle, held per backend x layout."""
     g = cluster["g"]
     wl = _workload(g, "uniform")
-    res, _ = over_engines[("hash", backend)].run(wl)
+    res, _ = over_engines[("hash", backend, layout)].run(wl)
     assert res.n_dropped > 0  # drop-oldest admission genuinely exercised
 
     sim = _oracle_sim(cluster, "hash", steal=False)
@@ -344,7 +356,7 @@ def test_engine_warm_state_carries_cache(cluster):
     paper's repeated-burst experiment on the jit path)."""
     g = cluster["g"]
     wl = hotspot_workload(g, r=1, n_hotspots=10, queries_per_hotspot=8, seed=7)
-    eng = cluster["engines"][("embed", "scatter")]
+    eng = cluster["engines"][("embed", "scatter", "dense")]
     res1, state = eng.run(wl)
     res2, _ = eng.run(wl, state=state)
     assert res2.reads < res1.reads

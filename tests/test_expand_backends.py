@@ -1,24 +1,29 @@
-"""Backend-differential oracle for the frontier-expansion seam.
+"""Backend- and layout-differential oracle for the frontier-expansion seam.
 
-`core.query_engine.expand_hop` delegates its visited-bitmap update to a
-pluggable backend (`EngineConfig.expand_backend`): `scatter` (the XLA
-`.at[].max()` reference), `pallas` (the batched compare-reduce kernel,
-exercised here through the interpreter so the exact kernel program runs on
-CPU), and `auto` (per-hop density cond). This suite is the fast kernel-path
-gate: it must fail BEFORE the slow engine<->simulator oracle does.
+`core.query_engine.expand_hop` composes two seams: the visited-set LAYOUT
+(`EngineConfig.visited_layout`: `dense` (B, n) bool vs `packed`
+(B, ceil(n/32)) uint32 words) and the expansion BACKEND
+(`EngineConfig.expand_backend`): `scatter` (the XLA scatter reference),
+`pallas` (the blocked compare-reduce kernels -- dense and packed variants
+-- exercised here through the interpreter so the exact kernel programs run
+on CPU), and `auto` (per-hop density cond; popcount-refined for packed).
+This suite is the fast kernel-path gate: it must fail BEFORE the slow
+engine<->simulator oracle does.
 
 Three altitudes:
 
-  1. kernel vs reference across (B, F, W, n) shapes -- padding seams
-     (F % bf != 0, n % bn != 0, dims smaller than one block), all-padded
-     (drained) frontiers, deg == 0 rows, out-of-range ids;
+  1. kernels vs reference across (B, F, W, n) shapes -- padding seams
+     (F % bf != 0, n % bn != 0, word-count % bw != 0, dims smaller than
+     one block), all-padded (drained) frontiers, deg == 0 rows,
+     out-of-range ids; the packed kernel additionally vs pack(dense ref);
   2. the full query engine (`run_neighbor_aggregation`) run under every
-     backend on the same workload: counts, stats, and the ENTIRE cache
-     state must be bit-identical -- the backend-invariance guarantee the
-     parity oracle then re-checks against the simulator;
+     (backend, layout) cell on the same workload: counts, stats, and the
+     ENTIRE cache state must be bit-identical to the (scatter, dense)
+     reference -- the invariance guarantee the parity oracle then
+     re-checks against the simulator;
   3. trace discipline: bucketed padding (never clamping block sizes to the
      input) keeps the jit trace count flat across frontier sizes within a
-     bucket -- the retrace-churn regression test.
+     bucket, for BOTH kernel programs -- the retrace-churn regression test.
 """
 
 import numpy as np
@@ -27,18 +32,20 @@ import jax.numpy as jnp
 
 from repro.core import cache as cache_lib
 from repro.core.query_engine import (
-    EXPAND_BACKENDS, EngineConfig, get_expand_backend, make_ref_multi_read,
-    run_neighbor_aggregation,
+    EXPAND_BACKENDS, VISITED_LAYOUTS, EngineConfig, get_expand_backend,
+    get_visited_layout, make_ref_multi_read, run_neighbor_aggregation,
 )
 from repro.core.storage import build_storage
 from repro.graph.csr import to_padded
 from repro.kernels import frontier as frontier_lib
 from repro.kernels import ref
 from repro.kernels.frontier import (
-    dense_frontier, frontier_expand, frontier_expand_batched,
+    dense_frontier, dense_frontier_packed, frontier_expand,
+    frontier_expand_batched, frontier_expand_packed, pack_words, unpack_words,
 )
 
 BF, BN = 16, 128  # small blocks so tiny shapes still cross block seams
+BW = BN // 32  # packed word blocks covering the same BN-bit span
 
 
 def _batch_case(B, F, W, n, seed, frac_pad=0.15):
@@ -75,6 +82,56 @@ def test_batched_kernel_vs_ref(B, F, W, n, label):
         for b in range(B)
     ])
     np.testing.assert_array_equal(np.asarray(out), expect, err_msg=label)
+
+
+@pytest.mark.parametrize("B,F,W,n,label", BATCH_CASES)
+def test_packed_kernel_vs_ref(B, F, W, n, label):
+    """The packed kernel == pack(dense reference) across the same padding
+    seams, PLUS the word seams (n % 32 != 0 -> partial trailing word)."""
+    rows, deg, visited = _batch_case(B, F, W, n, seed=B * 131 + n)
+    words = pack_words(jnp.asarray(visited))
+    out = frontier_expand_packed(
+        jnp.asarray(rows), jnp.asarray(deg), words, n,
+        bf=BF, bw=BW, interpret=True,
+    )
+    expect = np.stack([
+        np.asarray(ref.frontier_expand_ref(
+            jnp.asarray(rows[b]), jnp.asarray(deg[b]), jnp.asarray(visited[b])))
+        for b in range(B)
+    ])
+    np.testing.assert_array_equal(
+        np.asarray(unpack_words(out, n)), expect, err_msg=label)
+    # padding bits past n must stay zero (popcount exactness invariant)
+    nw = out.shape[1]
+    tail = np.asarray(unpack_words(out, nw * 32))[:, n:]
+    assert not tail.any(), label
+
+
+def test_ops_single_query_packed_wrapper():
+    """`ops.frontier_expand_packed` (the public single-query entry point):
+    its pallas path and its unpack/expand/repack reference path agree with
+    each other and with pack(dense reference), incl. out-of-range ids >= n
+    (the continuation-row sentinel the wrapper must mask to pad)."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(11)
+    F, W, n = 12, 4, 150
+    rows = rng.integers(0, n + 40, (F, W)).astype(np.int32)  # some ids >= n
+    rows[rng.random(rows.shape) < 0.2] = -1
+    deg = rng.integers(0, W + 1, F).astype(np.int32)
+    visited = rng.random(n) < 0.25
+    words = pack_words(jnp.asarray(visited))
+
+    expect = pack_words(ref.frontier_expand_ref(
+        jnp.where(jnp.asarray(rows) < n, jnp.asarray(rows), -1),
+        jnp.asarray(deg), jnp.asarray(visited)))
+    out_k = ops.frontier_expand_packed(
+        jnp.asarray(rows), jnp.asarray(deg), words, n,
+        use_pallas=True, interpret=True)
+    out_r = ops.frontier_expand_packed(
+        jnp.asarray(rows), jnp.asarray(deg), words, n, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(expect))
+    np.testing.assert_array_equal(np.asarray(out_r), np.asarray(expect))
 
 
 def test_batched_kernel_all_padded_frontier():
@@ -115,7 +172,8 @@ def test_batched_rows_isolated_per_query():
 
 
 # ---------------------------------------------------------------------------
-# the seam itself: every backend produces bit-identical engine behaviour
+# the seams themselves: every (backend, layout) cell produces bit-identical
+# engine behaviour
 # ---------------------------------------------------------------------------
 
 
@@ -126,9 +184,10 @@ def small_engine(tiny_graph):
     return tiny_graph, tier, make_ref_multi_read(tier)
 
 
-def _run_backend(g, tier, mr, backend):
+def _run_backend(g, tier, mr, backend, layout="dense"):
     cache = cache_lib.make_cache(n_sets=256, n_ways=4, row_width=tier.row_width)
-    cfg = EngineConfig(max_frontier=320, chain_depth=32, expand_backend=backend)
+    cfg = EngineConfig(max_frontier=320, chain_depth=32, expand_backend=backend,
+                       visited_layout=layout)
     q = jnp.asarray(np.array([0, 3, 50, 123, -1], np.int32))
     tmap = jnp.zeros((g.n,), bool)
     counts, cache, stats, tmap = run_neighbor_aggregation(
@@ -138,13 +197,20 @@ def _run_backend(g, tier, mr, backend):
             np.asarray(tmap), cache)
 
 
-@pytest.mark.parametrize("backend", ["pallas-interpret", "auto-interpret"])
-def test_engine_backend_invariance(small_engine, backend):
+@pytest.mark.parametrize("backend,layout", [
+    ("pallas-interpret", "dense"),
+    ("auto-interpret", "dense"),
+    ("scatter", "packed"),
+    ("pallas-interpret", "packed"),
+    ("auto-interpret", "packed"),
+])
+def test_engine_backend_invariance(small_engine, backend, layout):
     """Counts, stats, touch bitmap AND the full cache state must match the
-    scatter reference exactly -- the invariance the parity oracle relies on."""
+    (scatter, dense) reference exactly -- the invariance the parity oracle
+    relies on, over the full backend x layout grid."""
     g, tier, mr = small_engine
     base = _run_backend(g, tier, mr, "scatter")
-    got = _run_backend(g, tier, mr, backend)
+    got = _run_backend(g, tier, mr, backend, layout)
     np.testing.assert_array_equal(got[0], base[0])  # counts
     assert got[1:4] == base[1:4]  # reads / touched / misses
     np.testing.assert_array_equal(got[4], base[4])  # truncated
@@ -152,7 +218,7 @@ def test_engine_backend_invariance(small_engine, backend):
     for name in ("tags", "age", "data", "deg", "cont", "hits", "misses"):
         np.testing.assert_array_equal(
             np.asarray(getattr(got[6], name)), np.asarray(getattr(base[6], name)),
-            err_msg=f"cache.{name} diverged under {backend}")
+            err_msg=f"cache.{name} diverged under ({backend}, {layout})")
 
 
 def test_serving_engine_auto_backend_matches_scatter():
@@ -171,20 +237,24 @@ def test_serving_engine_auto_backend_matches_scatter():
                          n_shards=2)
     wl = uniform_workload(g, n_queries=32, seed=3)
     results = {}
-    for backend in ("scatter", "auto-interpret"):
+    for backend, layout in (("scatter", "dense"), ("auto-interpret", "dense"),
+                            ("auto-interpret", "packed")):
         cfg = EngineRunConfig(
             n_processors=2, round_size=16, capacity=16, hops=2,
             max_frontier=128, cache_sets=256, cache_ways=8, chain_depth=2,
-            track_touched=True, expand_backend=backend,
+            track_touched=True, expand_backend=backend, visited_layout=layout,
         )
         router = Router(2, RouterConfig(scheme="hash"), seed=1)
         res, _ = ServingEngine(tier, router, cfg).run(wl)
-        results[backend] = res
-    base, got = results["scatter"], results["auto-interpret"]
-    np.testing.assert_array_equal(got.counts, base.counts)
-    np.testing.assert_array_equal(got.touched_bitmap, base.touched_bitmap)
-    assert (got.reads, got.touched, got.probe_misses) == (
-        base.reads, base.touched, base.probe_misses)
+        results[(backend, layout)] = res
+    base = results[("scatter", "dense")]
+    for key in (("auto-interpret", "dense"), ("auto-interpret", "packed")):
+        got = results[key]
+        np.testing.assert_array_equal(got.counts, base.counts, err_msg=str(key))
+        np.testing.assert_array_equal(got.touched_bitmap, base.touched_bitmap,
+                                      err_msg=str(key))
+        assert (got.reads, got.touched, got.probe_misses) == (
+            base.reads, base.touched, base.probe_misses), key
 
 
 def test_shard_map_auto_backend_matches_scatter():
@@ -206,12 +276,15 @@ def test_shard_map_auto_backend_matches_scatter():
     mesh = make_auto_mesh((1, 1), ("data", "model"))
     queries = jnp.asarray(np.arange(8, dtype=np.int32))[None, :]
     out = {}
-    for backend in ("scatter", "auto-interpret", "pallas-interpret"):
+    cells = (("scatter", "dense"), ("auto-interpret", "dense"),
+             ("pallas-interpret", "dense"), ("scatter", "packed"),
+             ("pallas-interpret", "packed"))
+    for backend, layout in cells:
         cfg = GServeConfig(
             n_nodes=g.n, n_rows=adj.n_rows, row_width=adj.max_degree,
             n_storage_shards=1, queries_per_proc=8, hops=2, max_frontier=128,
             cache_sets=128, cache_ways=4, read_capacity=512, chain_depth=8,
-            embed_dim=4, expand_backend=backend,
+            embed_dim=4, expand_backend=backend, visited_layout=layout,
         )
         step = jax.jit(make_distributed_serve_step(mesh, cfg))
         inputs = {
@@ -223,18 +296,23 @@ def test_shard_map_auto_backend_matches_scatter():
         }
         with mesh:
             counts, _, _, stats = step(inputs)
-        out[backend] = (np.asarray(counts), np.asarray(stats))
-    for backend in ("auto-interpret", "pallas-interpret"):
-        np.testing.assert_array_equal(out[backend][0], out["scatter"][0],
-                                      err_msg=backend)
-        np.testing.assert_array_equal(out[backend][1], out["scatter"][1],
-                                      err_msg=backend)
+        out[(backend, layout)] = (np.asarray(counts), np.asarray(stats))
+    for cell in cells[1:]:
+        np.testing.assert_array_equal(out[cell][0], out[cells[0]][0],
+                                      err_msg=str(cell))
+        np.testing.assert_array_equal(out[cell][1], out[cells[0]][1],
+                                      err_msg=str(cell))
 
 
 def test_get_expand_backend_rejects_unknown():
     with pytest.raises(ValueError, match="unknown expand_backend"):
         get_expand_backend("madeup", n=100)
+    with pytest.raises(ValueError, match="unknown visited_layout"):
+        get_visited_layout("madeup")
+    with pytest.raises(ValueError, match="unknown visited_layout"):
+        get_expand_backend("scatter", n=100, layout="madeup")
     assert set(EXPAND_BACKENDS) >= {"scatter", "pallas", "auto"}
+    assert set(VISITED_LAYOUTS) == {"dense", "packed"}
 
 
 def test_dense_frontier_heuristic():
@@ -243,6 +321,24 @@ def test_dense_frontier_heuristic():
     assert bool(dense_frontier(deg, n=100))  # 256 * 8 >= 400
     assert not bool(dense_frontier(deg, n=100_000))
     assert not bool(dense_frontier(jnp.zeros((4, 8), jnp.int32), n=8))
+
+
+def test_dense_frontier_packed_heuristic():
+    """Popcount refinement: on an empty bitmap the packed predicate equals
+    the dense one; as occupancy rises the unvisited budget shrinks and the
+    kernel threshold is crossed earlier."""
+    B, n = 4, 1000
+    deg = jnp.full((B, 8), 8, jnp.int32)  # 256 candidates, 2048 weighted
+    empty = jnp.zeros((B, -(-n // 32)), jnp.uint32)
+    assert bool(dense_frontier_packed(deg, empty, n=100)) == bool(
+        dense_frontier(deg, n=100))
+    # empty bitmap: 256 * 8 = 2048 < 4000 unvisited bits -> scatter
+    assert not bool(dense_frontier_packed(deg, empty, n=n))
+    # ~60% occupancy: unvisited = 1600 <= 2048 -> kernel (dense still says no)
+    rng = np.random.default_rng(0)
+    occ = pack_words(jnp.asarray(rng.random((B, n)) < 0.6))
+    assert bool(dense_frontier_packed(deg, occ, n=n))
+    assert not bool(dense_frontier(deg, n=n))
 
 
 # ---------------------------------------------------------------------------
@@ -279,6 +375,24 @@ def test_batched_trace_count_flat_within_bucket():
         frontier_expand_batched(rows, deg, jnp.zeros((2, n), bool), bf=48,
                                 bn=256, interpret=True)
     assert frontier_lib.TRACE_COUNTS["frontier_expand_batched"] == 1
+
+
+def test_packed_trace_count_flat_within_bucket():
+    """The packed kernel inherits the pad-up-never-clamp discipline: any
+    (F, word-count) inside one (bf, bw) bucket shares a single trace."""
+    frontier_lib.TRACE_COUNTS.clear()
+    for F, n in ((30, 250), (40, 255), (48, 129)):  # words 8, 8, 5 -> bw 8
+        rows = jnp.full((2, F, 4), -1, jnp.int32)
+        deg = jnp.zeros((2, F), jnp.int32)
+        vis = jnp.zeros((2, -(-n // 32)), jnp.uint32)
+        frontier_expand_packed(rows, deg, vis, n, bf=48, bw=8, interpret=True)
+    assert frontier_lib.TRACE_COUNTS["frontier_expand_packed"] == 1
+    # crossing the word-block bucket edge retraces exactly once more
+    vis = jnp.zeros((2, 9), jnp.uint32)  # 9 words > bw=8 -> second bucket
+    frontier_expand_packed(jnp.full((2, 30, 4), -1, jnp.int32),
+                           jnp.zeros((2, 30), jnp.int32), vis, 9 * 32,
+                           bf=48, bw=8, interpret=True)
+    assert frontier_lib.TRACE_COUNTS["frontier_expand_packed"] == 2
 
 
 def test_frontier_expand_matches_ref_after_padding_change():

@@ -1,0 +1,127 @@
+"""Property tests: the bit-packed visited-set layout (`core.visited`).
+
+Runs through tests/_hypothesis_compat -- real hypothesis when installed, a
+deterministic fixed-seed sample otherwise (tier-1 has no hypothesis).
+
+The packed layout's contract is REPRESENTATION EQUIVALENCE with the dense
+bool bitmap: `unpack(packed_op(pack(x))) == dense_op(x)` for every visited
+operation the engine composes. Exercised here on adversarial shapes (n not
+a multiple of 32, single-word rows, empty/full bitmaps):
+
+  1. pack/unpack roundtrip is the identity, and padding bits inside the
+     last word are an invariant zero;
+  2. popcount-based result counts equal the dense row sums (the quantity
+     `run_neighbor_aggregation` reports as |N_h(q)|);
+  3. expansion insert is IDEMPOTENT (re-expanding the same frontier changes
+     nothing) and AGREES with the dense scatter reference, per backend;
+  4. an all-padded (drained) frontier is a no-op on the packed words --
+     the shape the engine feeds the expander once every BFS has finished;
+  5. the shared seed constructor plants exactly the query bit.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.visited import get_visited_layout
+from repro.kernels.frontier import n_words, pack_words, unpack_words
+
+DENSE = get_visited_layout("dense")
+PACKED = get_visited_layout("packed")
+
+
+def _rand_dense(rng, B, n, p=0.3):
+    return rng.random((B, n)) < p
+
+
+@settings(max_examples=25)
+@given(st.integers(1, 5), st.integers(1, 200), st.integers(0, 10**6))
+def test_pack_unpack_roundtrip(B, n, seed):
+    rng = np.random.default_rng(seed)
+    dense = _rand_dense(rng, B, n)
+    words = pack_words(jnp.asarray(dense))
+    assert words.shape == (B, n_words(n)) and words.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(unpack_words(words, n)), dense)
+    # padding bits past n inside the last word stay zero
+    tail = np.asarray(unpack_words(words, n_words(n) * 32))[:, n:]
+    assert not tail.any()
+
+
+@settings(max_examples=25)
+@given(st.integers(1, 5), st.integers(1, 200), st.integers(0, 10**6))
+def test_popcount_equals_dense_sum(B, n, seed):
+    rng = np.random.default_rng(seed)
+    dense = _rand_dense(rng, B, n)
+    counts = PACKED.count(PACKED.from_dense(jnp.asarray(dense)))
+    np.testing.assert_array_equal(np.asarray(counts), dense.sum(1))
+
+
+def _rand_frontier(rng, B, F, W, n, frac_pad=0.2):
+    rows = rng.integers(0, n, (B, F, W)).astype(np.int32)
+    rows[rng.random(rows.shape) < frac_pad] = -1
+    deg = rng.integers(0, W + 1, (B, F)).astype(np.int32)
+    return jnp.asarray(rows), jnp.asarray(deg)
+
+
+@settings(max_examples=10)
+@given(st.integers(1, 4), st.integers(1, 9), st.integers(33, 150),
+       st.integers(0, 10**6))
+def test_insert_idempotent_and_matches_dense(B, F, n, seed):
+    rng = np.random.default_rng(seed)
+    rows, deg = _rand_frontier(rng, B, F, 4, n)
+    start = _rand_dense(rng, B, n, p=0.2)
+    expect = np.asarray(
+        DENSE.expander("scatter", n)(rows, deg, jnp.asarray(start)))
+    for backend in ("scatter", "pallas-interpret"):
+        fn = PACKED.expander(backend, n)
+        once = fn(rows, deg, PACKED.from_dense(jnp.asarray(start)))
+        np.testing.assert_array_equal(
+            np.asarray(PACKED.to_dense(once, n)), expect, err_msg=backend)
+        twice = fn(rows, deg, once)  # insert idempotence
+        np.testing.assert_array_equal(
+            np.asarray(twice), np.asarray(once), err_msg=backend)
+
+
+@settings(max_examples=10)
+@given(st.integers(1, 4), st.integers(1, 9), st.integers(33, 150),
+       st.integers(0, 10**6))
+def test_all_padded_frontier_noop(B, F, n, seed):
+    rng = np.random.default_rng(seed)
+    rows = jnp.full((B, F, 4), -1, jnp.int32)
+    deg = jnp.zeros((B, F), jnp.int32)
+    start = PACKED.from_dense(jnp.asarray(_rand_dense(rng, B, n, p=0.4)))
+    for backend in ("scatter", "pallas-interpret"):
+        out = PACKED.expander(backend, n)(rows, deg, start)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(start), err_msg=backend)
+    # deg == 0 must also mask stale non-(-1) row contents
+    stale = jnp.full((B, F, 4), 7, jnp.int32)
+    for backend in ("scatter", "pallas-interpret"):
+        out = PACKED.expander(backend, n)(stale, deg, start)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(start), err_msg=backend)
+
+
+@settings(max_examples=20)
+@given(st.integers(1, 6), st.integers(33, 200), st.integers(0, 10**6))
+def test_seed_constructor_parity(B, n, seed):
+    """Both layouts' shared constructor plants exactly the query bit (and
+    nothing for -1 pads); packed agrees with dense after unpacking."""
+    rng = np.random.default_rng(seed)
+    queries = rng.integers(0, n, B).astype(np.int32)
+    queries[rng.random(B) < 0.3] = -1
+    q = jnp.asarray(queries)
+    F = 8
+    vis_d, fr_d, valid_d = DENSE.init_search(q, n, F)
+    vis_p, fr_p, valid_p = PACKED.init_search(q, n, F)
+    np.testing.assert_array_equal(np.asarray(fr_d), np.asarray(fr_p))
+    np.testing.assert_array_equal(np.asarray(valid_d), np.asarray(valid_p))
+    np.testing.assert_array_equal(
+        np.asarray(PACKED.to_dense(vis_p, n)), np.asarray(vis_d))
+    expect = np.zeros((B, n), bool)
+    for i, qi in enumerate(queries):
+        if qi >= 0:
+            expect[i, qi] = True
+    np.testing.assert_array_equal(np.asarray(vis_d), expect)
+    np.testing.assert_array_equal(
+        np.asarray(PACKED.count(vis_p)), (queries >= 0).astype(np.int32))
